@@ -1,0 +1,39 @@
+"""Theorems 4/5: strongly-convex convergence — E||x_T - x*||^2 under the
+prescribed alpha = 2(logT + logp)/(cT) vs the theorem RHS, for the sync
+baseline (B=0) and the variance-bounded elastic scheduler (B = 3 sigma)."""
+from __future__ import annotations
+
+import math
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import theory
+from repro.core.problems import Quadratic
+from repro.core.sim import Relaxation, simulate
+
+P, DIM = 8, 32
+
+
+def run():
+    prob = Quadratic(dim=DIM, cond=8.0, sigma=1.0, seed=0)
+    x0 = np.ones(DIM, np.float32) * 2.0
+    pc = prob.constants(x0)
+    rows = []
+    for T in (400, 800, 1600):
+        alpha = 2 * (math.log(T) + math.log(P)) / (prob.c * T)
+        for name, relax, b in [
+            ("sync", Relaxation("sync"), 0.0),
+            ("elastic_var", Relaxation("elastic_variance", drop_prob=0.3),
+             theory.b_elastic_scheduler_variance(prob.sigma2)),
+        ]:
+            res, us = timed(lambda r=relax, a=alpha, t=T: simulate(
+                prob, r, P, a, t, seed=5, x0=x0), iters=1)
+            dist2 = float(np.sum(
+                (res.x_final - np.asarray(prob.x_star)) ** 2))
+            rhs = theory.thm5_rhs(pc, b, T, P)
+            rows.append(row(
+                f"thm5_strongly_convex/{name}_T{T}", us,
+                f"dist2={dist2:.5f};thm5_rhs={rhs:.5f};"
+                f"{'ok' if dist2 <= rhs else 'VIOLATION'}"))
+    return rows

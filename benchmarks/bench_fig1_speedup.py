@@ -1,0 +1,85 @@
+"""Figure 1 (right) / Figure 3 (left): accuracy vs (modelled) time.
+
+No wall-clock GPUs here, so time is modelled per iteration as
+    t_iter = t_compute + wire_bytes / link_bw
+with wire bytes counted exactly per strategy (what each worker puts on the
+wire per step: dense all-reduce vs top-k payloads vs deferred buckets). The
+benchmark reports modelled time-to-target-loss, and the wire-byte savings —
+the quantity the paper's ~20-30% speedup comes from.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import compression as C
+from repro.core.problems import MLPClassification
+from repro.core.sim import Relaxation, simulate
+
+P, T, ALPHA = 8, 800, 0.08
+LINK_BW = 50e9          # bytes/s per worker link (ICI-class)
+T_COMPUTE = 0.11        # modelled fwd+bwd per iteration at production scale
+#                         (qwen3-1.7b train_4k: ~72 TFLOP/dev / 197 TFLOP/s
+#                          x ~3 latency factor, from the dry-run)
+WIRE_DIM = 1_720_565_760 // 16  # params per model shard (qwen3-1.7b / 16):
+#                         convergence comes from the simulator; wire volume
+#                         is modelled at the production workload the paper's
+#                         scheduler would actually serve.
+TARGET_FACTOR = 0.45    # target = factor * initial loss
+
+
+def _wire_bytes_per_step(d: int, strategy: str, **kw) -> float:
+    if strategy in ("sync", "elastic_variance"):
+        return 2 * 4 * d                      # ring all-reduce, f32
+    if strategy == "topk":
+        k = int(d * kw["ratio"])
+        return P * 8 * k                      # gathered (val, idx) pairs
+    if strategy == "onebit":
+        return P * (d / 8 + 8)
+    if strategy == "elastic_norm":
+        return 2 * 4 * d * kw["beta_frac"]    # deferred fraction skipped
+    raise ValueError(strategy)
+
+
+def run():
+    mlp = MLPClassification(seed=0)
+    x0 = np.asarray(mlp.init(seed=1))
+    d = WIRE_DIM
+    cases = [
+        ("exact", Relaxation("sync"), dict(strategy="sync")),
+        ("elastic_norm_b08", Relaxation("elastic_norm", beta=0.8),
+         dict(strategy="elastic_norm", beta_frac=0.8)),
+        ("topk_ef_1of16", Relaxation(
+            "ef_comp", compressor=C.topk_compressor(1 / 16)),
+         dict(strategy="topk", ratio=1 / 16)),
+        ("onebit_ef", Relaxation("ef_comp",
+                                 compressor=C.onebit_compressor()),
+         dict(strategy="onebit")),
+        ("elastic_variance", Relaxation("elastic_variance", drop_prob=0.3),
+         dict(strategy="elastic_variance")),
+    ]
+
+    # common target from the exact run
+    res0, _ = timed(lambda: simulate(mlp, cases[0][1], P, ALPHA, T, seed=4,
+                                     x0=x0), iters=1)
+    target = res0.losses[0] * TARGET_FACTOR
+
+    rows = []
+    base_time = None
+    for name, relax, wire_kw in cases:
+        res, us = timed(lambda r=relax: simulate(mlp, r, P, ALPHA, T, seed=4,
+                                                 x0=x0), iters=1)
+        hit = np.argmax(res.losses < target)
+        steps = (int(hit) if res.losses[hit] < target else len(res.losses)) \
+            * res.record_every
+        wire = _wire_bytes_per_step(d, **wire_kw)
+        t_iter = T_COMPUTE + wire / LINK_BW
+        t_total = steps * t_iter
+        if base_time is None:
+            base_time = t_total
+        rows.append(row(
+            f"fig1_right/{name}", us,
+            f"steps_to_target={steps};wire_B_per_step={wire:.0f};"
+            f"modelled_s={t_total * 1e3:.2f}ms;"
+            f"speedup_vs_exact={base_time / max(t_total, 1e-12):.2f}x"))
+    return rows

@@ -1,0 +1,48 @@
+"""Kernel micro-benchmarks (interpret-mode wall time is CPU-bound and NOT a
+TPU estimate — the derived field carries the analytic VMEM-traffic model the
+TPU roofline uses)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import row, timed
+from repro.kernels.onebit_ef import onebit_ef
+from repro.kernels.swa_attention import swa_decode_attention
+from repro.kernels.topk_ef import topk_ef
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    rows = []
+
+    m, r, k = 64, 4096, 64
+    g = jax.random.normal(key, (m, r))
+    e = jnp.zeros((m, r))
+    out, us = timed(lambda: jax.block_until_ready(
+        topk_ef(g, e, k=k, interpret=True)))
+    wire = m * k * 8
+    rows.append(row("kernels/topk_ef_64x4096_k64", us,
+                    f"wire_bytes={wire};dense_bytes={m*r*4};"
+                    f"reduction={m*r*4/wire:.1f}x"))
+
+    out, us = timed(lambda: jax.block_until_ready(
+        onebit_ef(g, e, interpret=True)))
+    wire = m * r // 8 + m * 8
+    rows.append(row("kernels/onebit_ef_64x4096", us,
+                    f"wire_bytes={wire};dense_bytes={m*r*4};"
+                    f"reduction={m*r*4/wire:.1f}x"))
+
+    b, t, kv, gq, d = 1, 4096, 2, 4, 128
+    q = jax.random.normal(key, (b, kv, gq, d), jnp.bfloat16)
+    kc = jax.random.normal(key, (b, t, kv, d), jnp.bfloat16)
+    vc = jax.random.normal(key, (b, t, kv, d), jnp.bfloat16)
+    out, us = timed(lambda: jax.block_until_ready(
+        swa_decode_attention(q, kc, vc, jnp.int32(t - 1), window=1024,
+                             interpret=True)))
+    hbm = 2 * t * kv * d * 2          # one cache read
+    xla_hbm = hbm + b * kv * gq * t * 4 * 2  # + score row materialization
+    rows.append(row("kernels/swa_decode_1x4096_w1024", us,
+                    f"kernel_hbm_bytes={hbm};xla_fallback_bytes={xla_hbm};"
+                    f"traffic_saving={xla_hbm/hbm:.2f}x"))
+    return rows

@@ -1,0 +1,102 @@
+"""Roofline analysis (deliverable g): three terms per (arch x shape) from
+the dry-run artifacts, dominant bottleneck, and the useful-compute ratio
+MODEL_FLOPS / HLO_FLOPS.
+
+Hardware model (TPU v5e-class): 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s
+per ICI link — per chip. Reads experiments/dryrun/*.json (single-pod,
+exact sync) and writes experiments/roofline.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import row
+from repro.configs import INPUT_SHAPES, get_config
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+CHIPS = 256
+
+DRYRUN_DIR = os.environ.get("DRYRUN_DIR", "experiments/dryrun")
+
+
+def model_flops_global(arch: str, shape_name: str) -> float:
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n * tokens
+    # decode: one token per sequence
+    return 2.0 * n * shape.global_batch
+
+
+def analyze_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or "costs" not in rec:
+        return None
+    c = rec["costs"]
+    t_compute = c["flops"] / PEAK_FLOPS
+    t_memory = c["bytes"] / HBM_BW
+    t_coll = c["collectives"].get("total", 0.0) / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops_global(rec["arch"], rec["shape"]) / CHIPS
+    ratio = mf / max(c["flops"], 1e-9)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "t_compute_s": t_compute, "t_memory_s": t_memory,
+        "t_collective_s": t_coll, "dominant": dominant,
+        "model_flops_per_chip": mf, "hlo_flops_per_chip": c["flops"],
+        "useful_ratio": ratio,
+        "peak_mem_gb": rec.get("memory", {}).get("peak_per_device_gb"),
+        "collective_breakdown_gib": {
+            k: v / 2**30 for k, v in c["collectives"].items()},
+    }
+
+
+def load_all(sync: str = "exact", suffix: str = "") -> list[dict]:
+    out = []
+    for path in sorted(glob.glob(
+            os.path.join(DRYRUN_DIR, f"*__single__{sync}{suffix}.json"))):
+        rec = json.load(open(path))
+        a = analyze_record(rec)
+        if a:
+            out.append(a)
+    return out
+
+
+def write_markdown(rows: list[dict], path: str):
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+    with open(path, "w") as f:
+        f.write("| arch | shape | t_compute (ms) | t_memory (ms) | "
+                "t_collective (ms) | dominant | useful ratio | mem GB |\n")
+        f.write("|---|---|---|---|---|---|---|---|\n")
+        for r in rows:
+            f.write(
+                f"| {r['arch']} | {r['shape']} | "
+                f"{r['t_compute_s']*1e3:.1f} | {r['t_memory_s']*1e3:.1f} | "
+                f"{r['t_collective_s']*1e3:.1f} | {r['dominant']} | "
+                f"{r['useful_ratio']:.2f} | {r['peak_mem_gb']} |\n")
+
+
+def run():
+    rows_data = load_all()
+    if rows_data:
+        write_markdown(rows_data, "experiments/roofline.md")
+    rows = []
+    for r in rows_data:
+        rows.append(row(
+            f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"tc={r['t_compute_s']*1e3:.1f}ms;tm={r['t_memory_s']*1e3:.1f}ms;"
+            f"tx={r['t_collective_s']*1e3:.1f}ms;dom={r['dominant']};"
+            f"useful={r['useful_ratio']:.2f};mem={r['peak_mem_gb']}GB"))
+    if not rows:
+        rows.append(row("roofline/no_dryrun_artifacts", 0.0,
+                        "run python -m repro.launch.dryrun first"))
+    return rows

@@ -1,0 +1,60 @@
+"""Table 1: measured elastic-consistency constant B_hat vs the paper's
+theoretical bound, per relaxation, on the strongly-convex testbed."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core import compression as C, theory
+from repro.core.problems import Quadratic
+from repro.core.sim import Relaxation, simulate, simulate_shared_memory
+
+P, T, ALPHA, DIM = 8, 600, 0.02, 32
+
+
+def run():
+    prob = Quadratic(dim=DIM, cond=8.0, sigma=1.0, seed=0)
+    x0 = np.ones(DIM, np.float32) * 2.0
+    r2 = float(np.sum((x0 - np.asarray(prob.x_star)) ** 2)) * 1.5
+    m2 = prob.m2_estimate(r2)
+    s2 = prob.sigma2
+
+    cases = [
+        ("sync", Relaxation("sync"), 0.0),
+        ("crash_f3", Relaxation("crash", f=3), theory.b_crash_m(P, 3, m2)),
+        ("crash_subst_f3", Relaxation("crash_subst", f=3),
+         theory.b_crash_variance(P, 3, s2)),
+        ("omission_f6", Relaxation("omission", f=6, drop_prob=0.2),
+         theory.b_crash_m(P, 6, m2)),
+        ("async_tau2", Relaxation("async", tau_max=2),
+         theory.b_async_mp(P, 2, m2)),
+        ("topk_ef_25pct", Relaxation("ef_comp",
+                                     compressor=C.topk_compressor(0.25)),
+         theory.b_ef_compression(C.topk_gamma(DIM, DIM // 4), m2)),
+        ("onebit_ef", Relaxation("ef_comp", compressor=C.onebit_compressor()),
+         theory.b_ef_compression(C.onebit_gamma(DIM), m2)),
+        ("elastic_norm_b08", Relaxation("elastic_norm", beta=0.8), None),
+        ("elastic_variance", Relaxation("elastic_variance", drop_prob=0.3),
+         theory.b_elastic_scheduler_variance(s2)),
+    ]
+
+    rows = []
+    for name, relax, bound in cases:
+        res, us = timed(lambda: simulate(prob, relax, P, ALPHA, T, seed=3,
+                                         x0=x0), iters=1)
+        ok = "na" if bound is None else ("ok" if res.b_hat <= bound * 1.05
+                                         else "VIOLATION")
+        rows.append(row(
+            f"table1/{name}", us,
+            f"B_hat={res.b_hat:.2f};B_theory="
+            f"{bound if bound is not None else float('nan'):.2f};{ok};"
+            f"loss_end={res.losses[-1]:.4f}"))
+
+    res, us = timed(lambda: simulate_shared_memory(
+        prob, P, 0.005, T, tau_max=3, seed=3, x0=x0), iters=1)
+    b = theory.b_shared_memory(DIM, 3, m2)
+    rows.append(row("table1/shared_memory_tau3", us,
+                    f"B_hat={res.b_hat:.2f};B_theory={b:.2f};"
+                    f"{'ok' if res.b_hat <= b else 'VIOLATION'};"
+                    f"loss_end={res.losses[-1]:.4f}"))
+    return rows

@@ -1,0 +1,24 @@
+"""Shared benchmark utilities. Every bench returns rows
+(name, us_per_call, derived) and run.py prints the CSV."""
+from __future__ import annotations
+
+import time
+
+
+def timed(fn, *args, warmup: int = 1, iters: int = 3):
+    for _ in range(warmup):
+        out = fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        out = fn(*args)
+    dt = (time.perf_counter() - t0) / iters
+    return out, dt * 1e6  # us
+
+
+def row(name: str, us: float, derived: str) -> tuple:
+    return (name, round(us, 1), derived)
+
+
+def print_rows(rows):
+    for name, us, derived in rows:
+        print(f"{name},{us},{derived}")

@@ -1,0 +1,40 @@
+"""Benchmark harness: one module per paper table/figure (+ roofline and
+kernel micro-benches). Prints ``name,us_per_call,derived`` CSV."""
+import sys
+import traceback
+
+from benchmarks.common import print_rows
+
+MODULES = [
+    "benchmarks.bench_table1_bounds",
+    "benchmarks.bench_fig1_beta_accuracy",
+    "benchmarks.bench_fig1_speedup",
+    "benchmarks.bench_fig3_variance_bounded",
+    "benchmarks.bench_convergence_nonconvex",
+    "benchmarks.bench_convergence_strongly_convex",
+    "benchmarks.bench_lemma6_lower_bound",
+    "benchmarks.bench_kernels",
+    "benchmarks.bench_roofline",
+]
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    failed = 0
+    only = sys.argv[1] if len(sys.argv) > 1 else ""
+    for modname in MODULES:
+        if only and only not in modname:
+            continue
+        try:
+            mod = __import__(modname, fromlist=["run"])
+            print_rows(mod.run())
+        except Exception:  # noqa: BLE001
+            traceback.print_exc()
+            print(f"{modname},0,FAILED")
+            failed += 1
+    if failed:
+        raise SystemExit(1)
+
+
+if __name__ == '__main__':
+    main()

@@ -1,0 +1,46 @@
+"""Serving example: batched prefill + decode on a smoke-scale architecture,
+including a hybrid (zamba2: mamba2 + shared attention) and an attention-free
+(rwkv6) model — the same serve_step the decode dry-run shapes lower.
+
+Run:  PYTHONPATH=src python examples/serving.py
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import synthetic_batch
+from repro.dist.train import make_decode_step, make_prefill_step
+from repro.models import transformer as TF
+from repro.models.params import init_params
+
+B, PROMPT, GEN = 4, 32, 12
+
+
+def serve(arch: str):
+    cfg = get_config(arch).reduced()
+    flags = TF.RunFlags(remat=False)
+    params = init_params(TF.model_defs(cfg), jax.random.PRNGKey(0))
+    batch = synthetic_batch(cfg, B, PROMPT, seed=1)
+    batch.pop("labels")
+    prefill = jax.jit(make_prefill_step(cfg, PROMPT + GEN, flags))
+    decode = jax.jit(make_decode_step(cfg, flags), donate_argnums=(1,))
+    tok, cache = prefill(params, batch)
+    outs = [np.asarray(tok)]
+    for _ in range(GEN - 1):
+        tok, cache = decode(params, cache, tok[:, None])
+        outs.append(np.asarray(tok))
+    gen = np.stack(outs, 1)
+    print(f"{arch:<22} generated {gen.shape} tokens; "
+          f"seq0: {gen[0][:8].tolist()}...")
+    assert np.isfinite(gen).all()
+
+
+def main():
+    for arch in ("qwen3-1.7b", "mixtral-8x7b", "zamba2-7b", "rwkv6-1.6b"):
+        serve(arch)
+    print("\n4 architecture families served through the same API.")
+
+
+if __name__ == "__main__":
+    main()

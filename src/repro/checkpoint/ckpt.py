@@ -1,0 +1,50 @@
+"""Minimal pytree checkpointing (.npz + structure manifest).
+
+Arrays are gathered to host and written atomically; restore rebuilds the
+pytree and (optionally) re-shards onto a mesh via ``jax.device_put`` with the
+provided shardings. Format: one ``step_<N>.npz`` per step with flattened
+``"<idx>"`` keys plus a pickled treedef sidecar.
+"""
+from __future__ import annotations
+
+import os
+import pickle
+import tempfile
+
+import jax
+import numpy as np
+
+
+def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
+    os.makedirs(ckpt_dir, exist_ok=True)
+    leaves, treedef = jax.tree.flatten(tree)
+    arrays = {str(i): np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    with os.fdopen(fd, "wb") as f:
+        np.savez(f, **arrays)
+    os.replace(tmp, path)
+    with open(path + ".treedef", "wb") as f:
+        pickle.dump(treedef, f)
+    return path
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    if not os.path.isdir(ckpt_dir):
+        return None
+    steps = [int(f[len("step_"):-len(".npz")])
+             for f in os.listdir(ckpt_dir)
+             if f.startswith("step_") and f.endswith(".npz")]
+    return max(steps) if steps else None
+
+
+def load_checkpoint(ckpt_dir: str, step: int, shardings=None):
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with open(path + ".treedef", "rb") as f:
+        treedef = pickle.load(f)
+    data = np.load(path)
+    leaves = [data[str(i)] for i in range(len(data.files))]
+    tree = jax.tree.unflatten(treedef, leaves)
+    if shardings is not None:
+        tree = jax.tree.map(jax.device_put, tree, shardings)
+    return tree

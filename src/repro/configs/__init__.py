@@ -1,0 +1,33 @@
+"""Architecture config registry: ``get_config("<arch-id>")``."""
+from __future__ import annotations
+
+from repro.configs.base import ArchConfig, InputShape, INPUT_SHAPES  # noqa: F401
+
+from repro.configs.musicgen_large import CONFIG as _musicgen
+from repro.configs.internvl2_2b import CONFIG as _internvl2
+from repro.configs.grok_1_314b import CONFIG as _grok
+from repro.configs.moonshot_v1_16b_a3b import CONFIG as _moonshot
+from repro.configs.zamba2_7b import CONFIG as _zamba2
+from repro.configs.rwkv6_1_6b import CONFIG as _rwkv6
+from repro.configs.mistral_nemo_12b import CONFIG as _nemo
+from repro.configs.mixtral_8x7b import CONFIG as _mixtral
+from repro.configs.qwen3_1_7b import CONFIG as _qwen3
+from repro.configs.gemma3_27b import CONFIG as _gemma3
+
+REGISTRY: dict[str, ArchConfig] = {
+    c.name: c
+    for c in [
+        _musicgen, _internvl2, _grok, _moonshot, _zamba2,
+        _rwkv6, _nemo, _mixtral, _qwen3, _gemma3,
+    ]
+}
+
+ARCH_IDS = tuple(REGISTRY)
+
+
+def get_config(name: str) -> ArchConfig:
+    if name.endswith("-smoke"):
+        return REGISTRY[name[: -len("-smoke")]].reduced()
+    if name not in REGISTRY:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(REGISTRY)}")
+    return REGISTRY[name]

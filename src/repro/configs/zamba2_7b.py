@@ -1,0 +1,28 @@
+"""zamba2-7b — hybrid Mamba2 backbone + shared attention blocks.
+
+[arXiv:2411.15242] 81L, d_model=3584, 32 heads (GQA kv=32) in the shared
+attention block, d_ff=14336, vocab=32000, ssm_state=64. The single shared
+transformer block is applied every 6 Mamba2 layers (weights shared).
+"""
+from repro.configs.base import ArchConfig, BLOCK_MAMBA2
+
+CONFIG = ArchConfig(
+    name="zamba2-7b",
+    family="hybrid",
+    n_layers=81,
+    d_model=3584,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=14336,
+    vocab_size=32000,
+    ssm_state=64,
+    ssm_heads=64,       # d_inner = 2*3584 = 7168; head_dim 112 -> 64 heads
+    #                     (64 divides the 16-way model axis cleanly; 56 heads
+    #                     of dim 128 would leave the SSD tensors unshardable
+    #                     - see EXPERIMENTS.md SPerf zamba2/1)
+    ssm_expand=2,
+    conv_width=4,
+    shared_attn_every=6,
+    block_type=BLOCK_MAMBA2,
+    source="arXiv:2411.15242",
+)

@@ -1,0 +1,12 @@
+"""Elastic consistency — the paper's contribution.
+
+  * ``compression``  — contraction compressors Q (Eq. 25) + error feedback
+  * ``theory``       — Table 1 bounds and Theorem 2-5 RHS evaluators
+  * ``problems``     — strongly-convex / non-convex testbeds
+  * ``sim``          — exact-semantics simulator of Algorithms 1-6
+  * ``scheduler``    — production SPMD sync strategies (exact / topk_ef /
+                       onebit_ef / elastic) with on-device gap tracking
+"""
+from repro.core.sim import Relaxation, SimResult, simulate, simulate_shared_memory  # noqa: F401
+from repro.core.scheduler import SyncConfig, init_sync_state, sync_gradients  # noqa: F401
+from repro.core import compression, theory, problems  # noqa: F401

@@ -1,0 +1,162 @@
+"""Optimization problems for the exact-semantics simulator.
+
+Both expose the flat-vector interface the simulator uses:
+  * ``dim``                            — parameter dimension d
+  * ``loss(x)``                        — full objective f(x)
+  * ``grad(x)``                        — exact gradient
+  * ``batch_grads(views, key)``        — per-worker stochastic gradients at a
+    (p, d) stack of views (vmapped + jitted)
+  * ``constants()``                    — ProblemConstants for the theorems
+  * ``m2_estimate`` / ``sigma2``       — second-moment / variance bounds
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.theory import ProblemConstants
+
+
+class Quadratic:
+    """Strongly convex quadratic f(x) = 0.5 (x-x*)' A (x-x*), stochastic
+    gradients = exact gradient + isotropic noise with E||xi||^2 = sigma^2."""
+
+    def __init__(self, dim: int = 64, cond: float = 10.0, sigma: float = 1.0,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        eigs = np.linspace(1.0, cond, dim)
+        q, _ = np.linalg.qr(rng.normal(size=(dim, dim)))
+        self.A = jnp.asarray(q @ np.diag(eigs) @ q.T, jnp.float32)
+        self.x_star = jnp.asarray(rng.normal(size=dim), jnp.float32)
+        self.dim = dim
+        self.sigma = sigma
+        self.L = float(eigs[-1])
+        self.c = float(eigs[0])
+
+    def loss(self, x):
+        d = x - self.x_star
+        return 0.5 * d @ (self.A @ d)
+
+    def grad(self, x):
+        return self.A @ (x - self.x_star)
+
+    @functools.cached_property
+    def _batch_grads(self):
+        @jax.jit
+        def f(views, key):
+            g = jax.vmap(self.grad)(views)
+            noise = jax.random.normal(key, views.shape) * (
+                self.sigma / np.sqrt(self.dim))
+            return g + noise
+        return f
+
+    def batch_grads(self, views, key):
+        return self._batch_grads(views, key)
+
+    @property
+    def sigma2(self) -> float:
+        return self.sigma ** 2
+
+    def m2_estimate(self, radius2: float) -> float:
+        """Second-moment bound over ||x - x*||^2 <= radius2 (restricted set
+        X, as the paper requires for strongly convex objectives)."""
+        return self.L ** 2 * radius2 + self.sigma2
+
+    def constants(self, x0) -> ProblemConstants:
+        x0 = jnp.asarray(x0)
+        return ProblemConstants(
+            L=self.L, sigma2=self.sigma2,
+            f0_minus_fstar=float(self.loss(x0)),
+            c=self.c, x0_dist2=float(jnp.sum((x0 - self.x_star) ** 2)))
+
+
+class MLPClassification:
+    """Small two-layer MLP on a fixed synthetic classification set — the
+    non-convex testbed. Stochastic gradients come from minibatch sampling."""
+
+    def __init__(self, n_samples: int = 512, in_dim: int = 16,
+                 hidden: int = 32, n_classes: int = 4, batch: int = 16,
+                 seed: int = 0):
+        rng = np.random.default_rng(seed)
+        w_true = rng.normal(size=(in_dim, n_classes))
+        xs = rng.normal(size=(n_samples, in_dim))
+        logits = xs @ w_true + 0.5 * rng.normal(size=(n_samples, n_classes))
+        ys = np.argmax(logits, axis=-1)
+        self.xs = jnp.asarray(xs, jnp.float32)
+        self.ys = jnp.asarray(ys, jnp.int32)
+        self.batch = batch
+        self.in_dim, self.hidden, self.n_classes = in_dim, hidden, n_classes
+        self.shapes = [(in_dim, hidden), (hidden,), (hidden, n_classes),
+                       (n_classes,)]
+        self.dim = sum(int(np.prod(s)) for s in self.shapes)
+
+    def init(self, seed: int = 1):
+        rng = np.random.default_rng(seed)
+        parts = [rng.normal(size=s) / np.sqrt(max(s[0], 1))
+                 for s in self.shapes]
+        return jnp.asarray(np.concatenate([p.reshape(-1) for p in parts]),
+                           jnp.float32)
+
+    def _unflatten(self, x):
+        out, o = [], 0
+        for s in self.shapes:
+            n = int(np.prod(s))
+            out.append(x[o:o + n].reshape(s))
+            o += n
+        return out
+
+    def _loss_on(self, x, xs, ys):
+        w1, b1, w2, b2 = self._unflatten(x)
+        h = jnp.tanh(xs @ w1 + b1)
+        logits = h @ w2 + b2
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, ys[:, None], axis=1))
+
+    @functools.cached_property
+    def _jit_loss(self):
+        return jax.jit(lambda x: self._loss_on(x, self.xs, self.ys))
+
+    def loss(self, x):
+        return self._jit_loss(jnp.asarray(x))
+
+    @functools.cached_property
+    def _jit_grad(self):
+        return jax.jit(jax.grad(lambda x: self._loss_on(x, self.xs, self.ys)))
+
+    def grad(self, x):
+        return self._jit_grad(jnp.asarray(x))
+
+    @functools.cached_property
+    def _batch_grads(self):
+        def one(x, key):
+            idx = jax.random.randint(key, (self.batch,), 0, self.xs.shape[0])
+            return jax.grad(self._loss_on)(x, self.xs[idx], self.ys[idx])
+
+        @jax.jit
+        def f(views, key):
+            keys = jax.random.split(key, views.shape[0])
+            return jax.vmap(one)(views, keys)
+        return f
+
+    def batch_grads(self, views, key):
+        return self._batch_grads(views, key)
+
+    def estimate_noise(self, x, n: int = 64, seed: int = 7):
+        """Empirical (sigma2, m2) at x."""
+        key = jax.random.PRNGKey(seed)
+        views = jnp.broadcast_to(jnp.asarray(x), (n, self.dim))
+        gs = self.batch_grads(views, key)
+        mean = jnp.mean(gs, axis=0)
+        sigma2 = float(jnp.mean(jnp.sum((gs - mean) ** 2, axis=-1)))
+        m2 = float(jnp.mean(jnp.sum(gs ** 2, axis=-1)))
+        return sigma2, m2
+
+    def constants(self, x0, L_estimate: float = 20.0) -> ProblemConstants:
+        sigma2, _ = self.estimate_noise(x0)
+        return ProblemConstants(
+            L=L_estimate, sigma2=sigma2,
+            f0_minus_fstar=float(self.loss(x0)),  # f* >= 0 for CE loss
+        )

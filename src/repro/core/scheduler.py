@@ -1,0 +1,317 @@
+"""Production gradient-synchronization strategies (the paper's technique as
+a first-class feature of the sharded trainer).
+
+These functions run *inside* a ``shard_map`` over the data-parallel mesh axes
+(``data``, and ``pod`` for multi-pod): each shard holds its local gradient
+pytree and the strategy decides what crosses the wire.
+
+Strategies
+----------
+exact      : ``pmean`` — the perfectly-consistent baseline (BytePS semantics).
+topk_ef    : per-shard magnitude top-k + error feedback (Alg 6). The wire
+             payload is (values, indices) all-gathered over the data axes —
+             with ratio r the collective moves ~2*r*p*n words instead of the
+             ~2n of a ring all-reduce.
+onebit_ef  : sign/mean 1-bit quantization + EF (Eq. 30); wire payload is a
+             packed bitmap + two means per row.
+elastic    : the TPU/SPMD adaptation of §5's elastic scheduler — per-step
+             *partial* synchronization over layer buckets with local residual
+             accumulation and retroactive correction (deferred mass is synced
+             on the bucket's next turn). The realized elastic-consistency gap
+             ||x_t - v_t||^2/alpha^2 = ||mean deferred residual||^2 is
+             tracked on-device and a `budget` forces full sync when exceeded
+             (Def. 1 as a runtime knob).
+
+Compression is applied along dims *not* sharded by the ``model`` axis so each
+device compresses only local data (no tensor-parallel collectives sneak in);
+the param PartitionSpecs drive that choice.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+
+@dataclass(frozen=True)
+class SyncConfig:
+    strategy: str = "exact"       # exact | topk_ef | onebit_ef | elastic
+    axis_names: tuple = ("data",)
+    wire_dtype: str = "f32"       # f32 | bf16: dtype crossing the data axes
+    #                               (bf16 halves collective bytes; a
+    #                               beyond-paper lever, composes with EF)
+    # compression
+    topk_ratio: float = 1.0 / 64.0
+    # elastic scheduling
+    n_buckets: int = 8
+    beta: float = 0.9             # norm gate: sync buckets covering beta of norm
+    gate: str = "norm"            # norm | static
+    phase_period: int = 4         # static gate: bucket b syncs when
+    #                               step % period == b % period
+    budget_b: float = 0.0         # elastic-consistency budget (0 = off):
+    #                               force full sync when gap exceeds it
+
+
+def _pmean(x, axes):
+    return jax.lax.pmean(x, axis_name=axes)
+
+
+def _axis_size(axes):
+    return jax.lax.psum(1, axis_name=axes)
+
+
+# ---------------------------------------------------------------------------
+# state
+# ---------------------------------------------------------------------------
+
+def init_sync_state(cfg: SyncConfig, grads_like):
+    zeros = jax.tree.map(lambda g: jnp.zeros(g.shape, jnp.float32), grads_like)
+    if cfg.strategy == "exact":
+        return {"step": jnp.zeros((), jnp.int32)}
+    if cfg.strategy in ("topk_ef", "onebit_ef"):
+        return {"err": zeros, "step": jnp.zeros((), jnp.int32)}
+    if cfg.strategy == "elastic":
+        return {"residual": zeros, "step": jnp.zeros((), jnp.int32)}
+    raise ValueError(cfg.strategy)
+
+
+# ---------------------------------------------------------------------------
+# per-leaf compression along non-model dims
+# ---------------------------------------------------------------------------
+
+def _split_model_dims(spec, ndim: int):
+    spec = tuple(spec) + (None,) * (ndim - len(tuple(spec)))
+    model = [i for i, s in enumerate(spec) if s is not None]
+    other = [i for i in range(ndim) if i not in model]
+    return model, other
+
+
+def _to_rows(g, spec):
+    """Reshape leaf to (M, R): M = product of sharded dims (kept local),
+    R = the rest (compressed)."""
+    model, other = _split_model_dims(spec, g.ndim)
+    perm = model + other
+    gt = jnp.transpose(g, perm)
+    m = 1
+    for i in model:
+        m *= g.shape[i]
+    return gt.reshape(m, -1), perm, gt.shape
+
+
+def _from_rows(rows, perm, tshape):
+    gt = rows.reshape(tshape)
+    inv = [0] * len(perm)
+    for i, p_ in enumerate(perm):
+        inv[p_] = i
+    return jnp.transpose(gt, inv)
+
+
+def _leaf_topk_sync(g, err, spec, ratio, axes):
+    """Top-k + EF sync of one leaf. Returns (synced_mean, new_err)."""
+    w = err + g.astype(jnp.float32)
+    if w.size == 0:  # zero-layer dry-run variants
+        return w, w
+    rows, perm, tshape = _to_rows(w, spec)
+    m, r = rows.shape
+    k = max(1, int(round(r * ratio)))
+    vals, idx = jax.lax.top_k(jnp.abs(rows), k)
+    vals = jnp.take_along_axis(rows, idx, axis=1)          # signed values
+    # wire: all-gather compressed payloads over the data axes
+    g_vals = jax.lax.all_gather(vals.astype(jnp.bfloat16), axis_name=axes,
+                                tiled=False)               # (p, M, k)
+    g_idx = jax.lax.all_gather(idx.astype(jnp.int32), axis_name=axes,
+                               tiled=False)
+    p = g_vals.shape[0]
+    g_vals = g_vals.reshape(p, m, k)
+    g_idx = g_idx.reshape(p, m, k)
+
+    def add_one(dense, pv):
+        pvv, pii = pv
+        return dense.at[jnp.arange(m)[:, None], pii].add(
+            pvv.astype(jnp.float32)), None
+
+    dense, _ = jax.lax.scan(add_one, jnp.zeros((m, r), jnp.float32),
+                            (g_vals, g_idx))
+    synced = _from_rows(dense / p, perm, tshape)
+    own_dense = jnp.zeros((m, r), jnp.float32).at[
+        jnp.arange(m)[:, None], idx].add(vals.astype(jnp.float32))
+    new_err = w - _from_rows(own_dense, perm, tshape)
+    return synced, new_err
+
+
+def _leaf_onebit_sync(g, err, spec, axes):
+    """1-bit (sign/mean) + EF sync of one leaf (Eq. 30 per local row)."""
+    w = err + g.astype(jnp.float32)
+    if w.size == 0:  # zero-layer dry-run variants
+        return w, w
+    rows, perm, tshape = _to_rows(w, spec)
+    m, r = rows.shape
+    pos = rows >= 0
+    n_pos = jnp.maximum(jnp.sum(pos, axis=1), 1)
+    n_neg = jnp.maximum(r - jnp.sum(pos, axis=1), 1)
+    mean_pos = jnp.sum(jnp.where(pos, rows, 0.0), axis=1) / n_pos
+    mean_neg = jnp.sum(jnp.where(pos, 0.0, rows), axis=1) / n_neg
+    # wire: bool bitmap (1 byte/elt in HLO; the Pallas kernel packs 8x) +
+    # two means per row
+    g_pos = jax.lax.all_gather(pos, axis_name=axes)        # (p, M, R) i1
+    g_mp = jax.lax.all_gather(mean_pos, axis_name=axes)
+    g_mn = jax.lax.all_gather(mean_neg, axis_name=axes)
+    p = g_pos.shape[0]
+    g_pos = g_pos.reshape(p, m, r)
+    g_mp, g_mn = g_mp.reshape(p, m), g_mn.reshape(p, m)
+    dense = jnp.sum(jnp.where(g_pos, g_mp[..., None], g_mn[..., None]),
+                    axis=0)
+    synced = _from_rows(dense / p, perm, tshape)
+    q_own = jnp.where(pos, mean_pos[:, None], mean_neg[:, None])
+    new_err = w - _from_rows(q_own, perm, tshape)
+    return synced, new_err
+
+
+# ---------------------------------------------------------------------------
+# elastic bucketing
+# ---------------------------------------------------------------------------
+
+def bucket_assignment(grads_like, n_buckets: int):
+    """Assign leaves to buckets contiguously by traversal order (layer
+    order), balancing by element count — the analogue of the paper's
+    per-layer gradient buckets."""
+    leaves = jax.tree.leaves(grads_like)
+    sizes = [x.size for x in leaves]
+    total = sum(sizes)
+    target = total / n_buckets
+    assign, b, acc = [], 0, 0.0
+    for s in sizes:
+        assign.append(min(b, n_buckets - 1))
+        acc += s
+        if acc >= target * (b + 1) and b < n_buckets - 1:
+            b += 1
+    return assign
+
+
+def _bucket_norms(resid, assign, n_buckets):
+    leaves = jax.tree.leaves(resid)
+    norms = jnp.zeros((n_buckets,), jnp.float32)
+    for a, leaf in zip(assign, leaves):
+        norms = norms.at[a].add(jnp.sum(jnp.square(leaf)))
+    return norms
+
+
+def norm_gate_mask(norms: jax.Array, beta: float, budget_b2: float = 0.0,
+                   gap2: Optional[jax.Array] = None) -> jax.Array:
+    """Select buckets (largest first) until >= beta of total norm^2 is
+    covered. If a budget is set and the realized gap exceeds it, sync all."""
+    total = jnp.sum(norms)
+    order = jnp.argsort(-norms)
+    sorted_norms = norms[order]
+    cum = jnp.cumsum(sorted_norms)
+    # bucket at sorted position j is selected if the cumulative mass *before*
+    # it is still < beta * total
+    sel_sorted = (cum - sorted_norms) < beta * total
+    mask = jnp.zeros_like(sel_sorted).at[order].set(sel_sorted)
+    if budget_b2 > 0.0 and gap2 is not None:
+        mask = jnp.where(gap2 > budget_b2, jnp.ones_like(mask), mask)
+    return mask
+
+
+def static_gate_mask(step: int, n_buckets: int, period: int):
+    """Deterministic round-robin: bucket b syncs when step % period ==
+    b % period. `step` must be a static python int (per-phase compilation) so
+    skipped buckets emit *no* collective in the HLO."""
+    return [b % period == step % period for b in range(n_buckets)]
+
+
+# ---------------------------------------------------------------------------
+# strategy entry point (called inside shard_map)
+# ---------------------------------------------------------------------------
+
+def sync_gradients(cfg: SyncConfig, grads, state, specs=None,
+                   static_phase: Optional[int] = None):
+    """Synchronize local gradients across the data axes.
+
+    Returns (synced_grads, new_state, metrics). ``specs`` is the param
+    PartitionSpec tree (required for the compressed strategies).
+    """
+    axes = cfg.axis_names
+    step = state["step"]
+    metrics = {}
+
+    if cfg.strategy == "exact":
+        wire = jnp.bfloat16 if cfg.wire_dtype == "bf16" else jnp.float32
+        synced = jax.tree.map(
+            lambda g: _pmean(g.astype(wire), axes).astype(jnp.float32),
+            grads)
+        return synced, {"step": step + 1}, {"gap2_over_alpha2": jnp.zeros(())}
+
+    if cfg.strategy in ("topk_ef", "onebit_ef"):
+        assert specs is not None, "compressed sync needs param specs"
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(state["err"])
+        flat_s = treedef.flatten_up_to(specs)
+        synced, errs = [], []
+        for g, e, sp in zip(flat_g, flat_e, flat_s):
+            if cfg.strategy == "topk_ef":
+                s, ne = _leaf_topk_sync(g, e, sp, cfg.topk_ratio, axes)
+            else:
+                s, ne = _leaf_onebit_sync(g, e, sp, axes)
+            synced.append(s)
+            errs.append(ne)
+        synced = jax.tree.unflatten(treedef, synced)
+        new_err = jax.tree.unflatten(treedef, errs)
+        # realized elastic gap: v - x = mean_i eps_i (Eq. 28)
+        mean_err = jax.tree.map(lambda e: _pmean(e, axes), new_err)
+        gap2 = sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(mean_err))
+        metrics["gap2_over_alpha2"] = gap2
+        return synced, {"err": new_err, "step": step + 1}, metrics
+
+    if cfg.strategy == "elastic":
+        assign = bucket_assignment(grads, cfg.n_buckets)
+        resid = jax.tree.map(
+            lambda r, g: r + g.astype(jnp.float32), state["residual"], grads)
+        flat_r, treedef = jax.tree.flatten(resid)
+
+        wire = jnp.bfloat16 if cfg.wire_dtype == "bf16" else jnp.float32
+
+        def wmean(r):
+            return _pmean(r.astype(wire), axes).astype(jnp.float32)
+
+        if cfg.gate == "static":
+            assert static_phase is not None, \
+                "static gate needs a compile-time phase"
+            mask_list = static_gate_mask(static_phase, cfg.n_buckets,
+                                         cfg.phase_period)
+            synced, new_resid = [], []
+            for a, r in zip(assign, flat_r):
+                if mask_list[a]:
+                    synced.append(wmean(r))          # sync backlog
+                    new_resid.append(jnp.zeros_like(r))
+                else:
+                    synced.append(jnp.zeros_like(r))  # defer (no collective)
+                    new_resid.append(r)
+            gap2 = sum(jnp.sum(jnp.square(_pmean(r, axes)))
+                       for r in new_resid)
+        else:
+            norms_local = _bucket_norms(resid, assign, cfg.n_buckets)
+            norms = jax.lax.psum(norms_local, axis_name=axes)
+            gap_prev = sum(jnp.sum(jnp.square(_pmean(r, axes)))
+                           for r in jax.tree.leaves(state["residual"]))
+            mask = norm_gate_mask(norms, cfg.beta,
+                                  cfg.budget_b * cfg.budget_b, gap_prev)
+            synced, new_resid = [], []
+            for a, r in zip(assign, flat_r):
+                m = mask[a].astype(jnp.float32)
+                s = wmean(r)             # semantic path: psum always lowered
+                synced.append(s * m)
+                new_resid.append(r * (1.0 - m))
+            gap2 = sum(jnp.sum(jnp.square(_pmean(r, axes)))
+                       for r in new_resid)
+
+        synced = jax.tree.unflatten(treedef, synced)
+        new_resid = jax.tree.unflatten(treedef, new_resid)
+        metrics["gap2_over_alpha2"] = gap2
+        return synced, {"residual": new_resid, "step": step + 1}, metrics
+
+    raise ValueError(cfg.strategy)

@@ -1,0 +1,3 @@
+from repro.data.pipeline import (  # noqa: F401
+    SyntheticLMDataset, make_batch_specs, synthetic_batch,
+)

@@ -1,0 +1,3 @@
+from repro.kernels.onebit_ef.kernel import onebit_ef  # noqa: F401
+from repro.kernels.onebit_ef.ref import onebit_ef_ref, unpack  # noqa: F401
+from repro.kernels.onebit_ef.ops import compress_leaf, decompress_sum  # noqa: F401

@@ -1,0 +1,67 @@
+"""Fused one-bit (sign/mean) quantization + error-feedback Pallas TPU kernel.
+
+Implements Eq. 30 per VMEM row block: [Q(w)]_i = mean over i's sign class,
+with the error memory update fused (Alg 6). The wire payload is a *packed*
+uint8 bitmap (8 signs/byte — the XLA fallback ships 1 byte/sign, so the
+kernel is an 8x wire saving on top of the 32x vs f32) plus two f32 means per
+row.
+
+Tiling: (BM, R) row blocks; all reductions are row-wise on the VPU over
+(8, 128)-lane tiles; the bit-pack is a reshape + weighted sum along the
+trailing 8-wide axis.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _onebit_ef_kernel(g_ref, e_ref, packed_ref, means_ref, err_ref):
+    w = e_ref[...] + g_ref[...].astype(jnp.float32)      # (BM, R)
+    bm, r = w.shape
+    pos = w >= 0.0
+    n_pos = jnp.maximum(jnp.sum(pos, axis=1), 1)
+    n_neg = jnp.maximum(r - jnp.sum(pos, axis=1), 1)
+    mean_pos = jnp.sum(jnp.where(pos, w, 0.0), axis=1) / n_pos
+    mean_neg = jnp.sum(jnp.where(pos, 0.0, w), axis=1) / n_neg
+    means_ref[:, 0] = mean_pos
+    means_ref[:, 1] = mean_neg
+    bits = pos.reshape(bm, r // 8, 8).astype(jnp.uint8)
+    weights = (2 ** jnp.arange(8, dtype=jnp.uint8))
+    packed_ref[...] = jnp.sum(bits * weights, axis=-1, dtype=jnp.uint8)
+    q = jnp.where(pos, mean_pos[:, None], mean_neg[:, None])
+    err_ref[...] = w - q
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def onebit_ef(g: jax.Array, err: jax.Array, *, block_rows: int = 8,
+              interpret: bool = False):
+    """g, err: (M, R) with R % 8 == 0. Returns (packed (M, R/8) u8,
+    means (M, 2) f32, new_err (M, R) f32)."""
+    m, r = g.shape
+    assert r % 8 == 0, r
+    bm = min(block_rows, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        _onebit_ef_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bm, r // 8), lambda i: (i, 0)),
+            pl.BlockSpec((bm, 2), lambda i: (i, 0)),
+            pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((m, r // 8), jnp.uint8),
+            jax.ShapeDtypeStruct((m, 2), jnp.float32),
+            jax.ShapeDtypeStruct((m, r), jnp.float32),
+        ],
+        interpret=interpret,
+    )(g, err)

@@ -1,0 +1,22 @@
+"""Jit wrappers for onebit_ef."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.onebit_ef.kernel import onebit_ef
+from repro.kernels.onebit_ef.ref import onebit_ef_ref, unpack
+
+
+def compress_leaf(g2d: jax.Array, err2d: jax.Array,
+                  use_kernel: bool = True, interpret: bool = True):
+    m, r = g2d.shape
+    if use_kernel and m % 8 == 0 and r % 8 == 0:
+        return onebit_ef(g2d, err2d, interpret=interpret)
+    return onebit_ef_ref(g2d, err2d)
+
+
+def decompress_sum(packed: jax.Array, means: jax.Array, r: int) -> jax.Array:
+    """packed (P, M, R/8), means (P, M, 2) -> dense sum (M, R)."""
+    q = unpack(packed, means, r)                         # (P, M, R)
+    return jnp.sum(q, axis=0)

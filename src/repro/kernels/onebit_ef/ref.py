@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the onebit_ef kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def onebit_ef_ref(g: jax.Array, err: jax.Array):
+    w = err + g.astype(jnp.float32)                      # (M, R)
+    m, r = w.shape
+    pos = w >= 0.0
+    n_pos = jnp.maximum(jnp.sum(pos, axis=1), 1)
+    n_neg = jnp.maximum(r - jnp.sum(pos, axis=1), 1)
+    mean_pos = jnp.sum(jnp.where(pos, w, 0.0), axis=1) / n_pos
+    mean_neg = jnp.sum(jnp.where(pos, 0.0, w), axis=1) / n_neg
+    bits = pos.reshape(m, r // 8, 8).astype(jnp.uint8)
+    packed = jnp.sum(bits * (2 ** jnp.arange(8, dtype=jnp.uint8)), axis=-1,
+                     dtype=jnp.uint8)
+    means = jnp.stack([mean_pos, mean_neg], axis=1)
+    q = jnp.where(pos, mean_pos[:, None], mean_neg[:, None])
+    return packed, means, w - q
+
+
+def unpack(packed: jax.Array, means: jax.Array, r: int) -> jax.Array:
+    """Reconstruct Q(w) from the wire payload."""
+    bits = (packed[..., None] >> jnp.arange(8, dtype=jnp.uint8)) & 1
+    pos = bits.reshape(*packed.shape[:-1], -1)[..., :r].astype(bool)
+    return jnp.where(pos, means[..., 0:1], means[..., 1:2])

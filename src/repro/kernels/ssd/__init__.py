@@ -1,0 +1,3 @@
+from repro.kernels.ssd.kernel import ssd_chunked_kernel  # noqa: F401
+from repro.kernels.ssd.ref import ssd_ref  # noqa: F401
+from repro.kernels.ssd.ops import ssd  # noqa: F401

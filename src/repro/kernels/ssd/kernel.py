@@ -1,0 +1,98 @@
+"""Fused Mamba2/SSD chunk-scan Pallas TPU kernel.
+
+The §Perf analysis of zamba2 x train_4k showed the SSD path is memory-bound:
+the XLA lowering materializes the (C, C) decay/attention matrices and the
+f32 state updates in HBM every chunk. This kernel runs the whole chunked
+recurrence for one (batch, head) with the chunk tensors and the running
+state resident in VMEM:
+
+  grid (B, H, n_chunks), chunk dimension sequential; per step
+    cum   = cumsum(a_chunk)                      (C,)
+    L     = tril(exp(cum_i - cum_j))             (C, C)   VMEM only
+    A     = (C_c @ B_c^T) * L                    (C, C)   VMEM only
+    y     = A @ X_c + exp(cum) * (C_c @ S^T)     (C, hd)
+    S     = exp(cum_C) * S + X_c^T @ (B_c * exp(cum_C - cum))   (hd, N)
+
+HBM traffic: one read of X/a/B/C, one write of y and the final state — the
+(C,C) tensors never leave VMEM (the XLA form writes+reads them 4x with
+remat). All matmuls are MXU-shaped (C=128, hd, N multiples of 8/128 where
+the config allows).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref, s_scr,
+                *, chunk: int):
+    j = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        s_scr[...] = jnp.zeros_like(s_scr[...])
+
+    xc = x_ref[0, :, 0].astype(jnp.float32)       # (C, hd)
+    ac = a_ref[0, :, 0].astype(jnp.float32)       # (C,)
+    bc = b_ref[0].astype(jnp.float32)             # (C, N)
+    cc = c_ref[0].astype(jnp.float32)             # (C, N)
+
+    cum = jnp.cumsum(ac)                          # (C,)
+    ldiff = cum[:, None] - cum[None, :]           # (C, C)
+    mask = jnp.tril(jnp.ones((chunk, chunk), jnp.bool_))
+    lmat = jnp.where(mask, jnp.exp(ldiff), 0.0)
+    amat = (cc @ bc.T) * lmat                     # (C, C), VMEM-resident
+    state = s_scr[...]                            # (hd, N)
+    y = amat @ xc                                 # (C, hd)
+    y = y + jnp.exp(cum)[:, None] * (cc @ state.T)
+    decay_rest = jnp.exp(cum[-1] - cum)           # (C,)
+    kd = bc * decay_rest[:, None]                 # (C, N)
+    s_scr[...] = jnp.exp(cum[-1]) * state + xc.T @ kd
+    y_ref[0, :, 0] = y.astype(y_ref.dtype)
+
+    @pl.when(j == nt - 1)
+    def _finish():
+        s_out_ref[0, 0] = s_scr[...].astype(s_out_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_chunked_kernel(xh: jax.Array, a: jax.Array, bmat: jax.Array,
+                       cmat: jax.Array, *, chunk: int = 128,
+                       interpret: bool = False):
+    """xh: (B, T, H, hd) dt-scaled inputs; a: (B, T, H) log-decays (<= 0);
+    bmat/cmat: (B, T, N). Returns (y (B,T,H,hd), state (B,H,hd,N) f32).
+    Zero initial state (the train/prefill case)."""
+    b, t, h, hd = xh.shape
+    n = bmat.shape[-1]
+    c = min(chunk, t)
+    assert t % c == 0, (t, c)
+    grid = (b, h, t // c)
+    kernel = functools.partial(_ssd_kernel, chunk=c)
+    y, state = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, c, 1, hd), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, c, 1), lambda bi, hi, ti: (bi, ti, hi)),
+            pl.BlockSpec((1, c, n), lambda bi, hi, ti: (bi, ti, 0)),
+            pl.BlockSpec((1, c, n), lambda bi, hi, ti: (bi, ti, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, c, 1, hd), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, 1, hd, n), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, hd), xh.dtype),
+            jax.ShapeDtypeStruct((b, h, hd, n), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(xh, a, bmat, cmat)
+    return y, state

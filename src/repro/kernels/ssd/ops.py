@@ -1,0 +1,14 @@
+"""Jit wrapper: kernel (interpret on CPU, Mosaic on TPU) vs jnp oracle."""
+from __future__ import annotations
+
+from repro.kernels.ssd.kernel import ssd_chunked_kernel
+from repro.kernels.ssd.ref import ssd_ref
+
+
+def ssd(xh, a, bmat, cmat, *, use_kernel: bool = True,
+        interpret: bool = True, chunk: int = 128):
+    t = xh.shape[1]
+    if use_kernel and t % min(chunk, t) == 0:
+        return ssd_chunked_kernel(xh, a, bmat, cmat,
+                                  chunk=chunk, interpret=interpret)
+    return ssd_ref(xh, a, bmat, cmat)

@@ -1,0 +1,6 @@
+"""Oracle for the SSD kernel: the pure-jnp chunked scan the model uses."""
+from repro.models.mamba2 import ssd_chunked
+
+
+def ssd_ref(xh, a, bmat, cmat):
+    return ssd_chunked(xh, a, bmat, cmat, None)

@@ -1,0 +1,3 @@
+from repro.kernels.swa_attention.kernel import swa_decode_attention  # noqa: F401
+from repro.kernels.swa_attention.ref import swa_decode_ref  # noqa: F401
+from repro.kernels.swa_attention.ops import decode_attention  # noqa: F401

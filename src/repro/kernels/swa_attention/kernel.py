@@ -1,0 +1,102 @@
+"""Flash-style sliding-window decode attention Pallas TPU kernel.
+
+The serving hot path for the decode shapes (decode_32k / long_500k): one
+query token per sequence attends over a long KV cache. The XLA fallback
+materializes the (H, T) score row in HBM; this kernel streams KV blocks
+through VMEM with online-softmax accumulation, so HBM traffic is exactly one
+read of the (window of the) cache and the scores never leave VMEM — the
+memory-roofline win on a workload that is purely HBM-bound.
+
+Grid: (B, KV_heads, T/BT) with the T dimension sequential ("arbitrary"),
+carrying running (max, denom, acc) in VMEM scratch across KV blocks.
+Window/causal masking is positional: block j covers keys
+[j*BT, j*BT + BT), valid iff pos - window < key <= pos.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _swa_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                       m_scr, l_scr, acc_scr, *, block_t: int, window: int,
+                       scale: float):
+    j = pl.program_id(2)
+    nt = pl.num_programs(2)
+
+    @pl.when(j == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr[...], NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr[...])
+        acc_scr[...] = jnp.zeros_like(acc_scr[...])
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
+    k = k_ref[0, :, 0].astype(jnp.float32)               # (BT, D)
+    v = v_ref[0, :, 0].astype(jnp.float32)               # (BT, D)
+
+    key_pos = j * block_t + jax.lax.broadcasted_iota(
+        jnp.int32, (1, block_t), 1)[0]
+    valid = key_pos <= pos
+    if window:
+        valid &= (pos - key_pos) < window
+    s = (q @ k.T) * scale                                # (G, BT)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev, acc_prev = m_scr[...], l_scr[...], acc_scr[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+    p = jnp.exp(s - m_new)                               # (G, BT)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+    acc_new = acc_prev * corr + p @ v                    # (G, D)
+    m_scr[...], l_scr[...], acc_scr[...] = m_new, l_new, acc_new
+
+    @pl.when(j == nt - 1)
+    def _finish():
+        o_ref[0, 0] = (acc_scr[...] /
+                       jnp.maximum(l_scr[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "block_t",
+                                             "interpret"))
+def swa_decode_attention(q: jax.Array, k_cache: jax.Array,
+                         v_cache: jax.Array, pos: jax.Array, *,
+                         window: int = 0, block_t: int = 512,
+                         interpret: bool = False) -> jax.Array:
+    """q: (B, KV, G, D) one token per sequence (G = query heads per kv head);
+    k_cache/v_cache: (B, T, KV, D); pos: scalar int32 (current position —
+    keys at positions <= pos are live). Returns (B, KV, G, D)."""
+    b, nkv, g, d = q.shape
+    t = k_cache.shape[1]
+    bt = min(block_t, t)
+    assert t % bt == 0, (t, bt)
+    grid = (b, nkv, t // bt)
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+    kernel = functools.partial(_swa_decode_kernel, block_t=bt, window=window,
+                               scale=d ** -0.5)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda bi, hi, ti: (0,)),
+            pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti: (bi, hi, 0, 0)),
+            pl.BlockSpec((1, bt, 1, d), lambda bi, hi, ti: (bi, ti, hi, 0)),
+            pl.BlockSpec((1, bt, 1, d), lambda bi, hi, ti: (bi, ti, hi, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti: (bi, hi, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, nkv, g, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, 1), jnp.float32),
+            pltpu.VMEM((g, d), jnp.float32),
+        ],
+        interpret=interpret,
+        compiler_params=pltpu.CompilerParams(
+            dimension_semantics=("parallel", "parallel", "arbitrary")),
+    )(pos_arr, q, k_cache, v_cache)

@@ -1,0 +1,21 @@
+"""Pure-jnp oracle for sliding-window decode attention."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def swa_decode_ref(q, k_cache, v_cache, pos, *, window: int = 0):
+    """q: (B, KV, G, D); caches (B, T, KV, D); pos scalar."""
+    b, nkv, g, d = q.shape
+    t = k_cache.shape[1]
+    s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
+                   k_cache.astype(jnp.float32)) * (d ** -0.5)
+    key_pos = jnp.arange(t)
+    valid = key_pos <= pos
+    if window:
+        valid &= (pos - key_pos) < window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bkgt,btkd->bkgd", p,
+                      v_cache.astype(jnp.float32)).astype(q.dtype)

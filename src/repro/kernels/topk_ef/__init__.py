@@ -1,0 +1,3 @@
+from repro.kernels.topk_ef.kernel import topk_ef  # noqa: F401
+from repro.kernels.topk_ef.ref import topk_ef_ref, q_dense  # noqa: F401
+from repro.kernels.topk_ef.ops import compress_leaf, decompress_sum  # noqa: F401

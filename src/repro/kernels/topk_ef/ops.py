@@ -1,0 +1,32 @@
+"""Jit wrappers for topk_ef: leaf-level compress/decompress used by the
+production sync strategy (rows = model-sharded dims, cols compressed)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_ef.kernel import topk_ef
+from repro.kernels.topk_ef.ref import topk_ef_ref
+
+
+def compress_leaf(g2d: jax.Array, err2d: jax.Array, ratio: float,
+                  use_kernel: bool = True, interpret: bool = True):
+    """(M, R) leaf -> (vals, idx, new_err). ``interpret=True`` on CPU."""
+    m, r = g2d.shape
+    k = max(1, int(round(r * ratio)))
+    if use_kernel and m % 8 == 0:
+        return topk_ef(g2d, err2d, k=k, interpret=interpret)
+    return topk_ef_ref(g2d, err2d, k=k)
+
+
+def decompress_sum(vals: jax.Array, idx: jax.Array, r: int) -> jax.Array:
+    """Sum per-worker sparse payloads: vals/idx (P, M, k) -> dense (M, R)."""
+    p, m, k = vals.shape
+    dense = jnp.zeros((m, r), jnp.float32)
+
+    def add_one(dense, pv):
+        v, i = pv
+        return dense.at[jnp.arange(m)[:, None], i].add(v), None
+
+    dense, _ = jax.lax.scan(add_one, dense, (vals, idx))
+    return dense

@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the topk_ef kernel (identical row-local semantics)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_ef_ref(g: jax.Array, err: jax.Array, *, k: int):
+    w = err + g.astype(jnp.float32)                      # (M, R)
+    _, idx = jax.lax.top_k(jnp.abs(w), k)                # (M, k)
+    vals = jnp.take_along_axis(w, idx, axis=1)
+    mask = jnp.zeros(w.shape, bool)
+    mask = mask.at[jnp.arange(w.shape[0])[:, None], idx].set(True)
+    new_err = jnp.where(mask, 0.0, w)
+    return vals, idx, new_err
+
+
+def q_dense(g, err, *, k):
+    """Dense Q(w) for contraction-property tests."""
+    vals, idx, new_err = topk_ef_ref(g, err, k=k)
+    w = err + g.astype(jnp.float32)
+    return w - new_err

@@ -1,0 +1,122 @@
+"""End-to-end training driver (CPU-scale; same code path as the pod).
+
+Runs a reduced (or full, on real hardware) architecture with a real data
+pipeline, optimizer, checkpointing and any gradient-sync strategy:
+
+  python -m repro.launch.train --arch qwen3-1.7b-smoke --steps 200 \
+      --sync elastic --devices 8 --ckpt-dir /tmp/ckpt
+
+``--devices N`` forces N host devices (set before jax initializes) so the
+data-parallel sync strategies are exercised with real cross-shard traffic.
+"""
+import argparse
+import os
+import sys
+
+
+def _parse():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b-smoke")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=64)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--sync", default="exact",
+                    choices=["exact", "topk_ef", "onebit_ef", "elastic"])
+    ap.add_argument("--beta", type=float, default=0.9)
+    ap.add_argument("--budget-b", type=float, default=0.0)
+    ap.add_argument("--topk-ratio", type=float, default=1 / 16)
+    ap.add_argument("--devices", type=int, default=0)
+    ap.add_argument("--model-shards", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default="")
+    ap.add_argument("--ckpt-every", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--seed", type=int, default=0)
+    return ap.parse_args()
+
+
+def main():
+    args = _parse()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.checkpoint import save_checkpoint, latest_step, load_checkpoint
+    from repro.configs import get_config
+    from repro.core.scheduler import SyncConfig, init_sync_state
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.dist import sharding as SH
+    from repro.dist.train import make_elastic_train_step, make_train_step
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as TF
+    from repro.models.params import init_params, param_specs
+    from repro.optim import momentum
+
+    cfg = get_config(args.arch)
+    mesh = make_host_mesh(model=args.model_shards)
+    flags = TF.RunFlags(remat=False)
+    defs = TF.model_defs(cfg)
+    pspecs = param_specs(defs, SH.axis_sizes(mesh))
+    params = init_params(defs, jax.random.PRNGKey(args.seed))
+    opt = momentum(args.lr, 0.9)
+    opt_state = opt.init(params)
+
+    data = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
+                              seed=args.seed)
+
+    step_idx = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            params, opt_state = load_checkpoint(args.ckpt_dir, last)
+            step_idx = last
+            print(f"resumed from step {last}")
+
+    if args.sync == "exact":
+        step = jax.jit(make_train_step(cfg, opt, flags), donate_argnums=(0, 1))
+
+        def run(params, opt_state, sync_state, batch):
+            params, opt_state, metrics = step(params, opt_state, batch)
+            return params, opt_state, sync_state, metrics
+    else:
+        scfg = SyncConfig(
+            strategy=args.sync, axis_names=("data",),
+            topk_ratio=args.topk_ratio, beta=args.beta,
+            budget_b=args.budget_b,
+            gate="norm")
+        with mesh:
+            sync_state = init_sync_state(
+                scfg, jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
+                                   params))
+        estep = make_elastic_train_step(cfg, opt, mesh, scfg, pspecs, flags)
+        jstep = jax.jit(estep, donate_argnums=(0, 1, 2))
+
+        def run(params, opt_state, sync_state, batch):
+            return jstep(params, opt_state, sync_state, batch)
+
+    sync_state = locals().get("sync_state", {"step": jnp.zeros((), jnp.int32)})
+    losses = []
+    for t in range(step_idx, args.steps):
+        batch = data.batch(t)
+        params, opt_state, sync_state, metrics = run(
+            params, opt_state, sync_state, batch)
+        losses.append(float(metrics["loss"]))
+        if t % args.log_every == 0:
+            gap = float(metrics.get("gap2_over_alpha2", 0.0))
+            print(f"step {t:5d}  loss {losses[-1]:.4f}  gap2/a2 {gap:.4g}",
+                  flush=True)
+        if args.ckpt_dir and args.ckpt_every and \
+                (t + 1) % args.ckpt_every == 0:
+            save_checkpoint(args.ckpt_dir, t + 1, (params, opt_state))
+    print(f"final loss {np.mean(losses[-10:]):.4f}")
+    return losses
+
+
+if __name__ == "__main__":
+    main()

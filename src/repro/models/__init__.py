@@ -1,0 +1,7 @@
+from repro.models.transformer import (  # noqa: F401
+    RunFlags, DEFAULT_FLAGS, model_defs, forward, prefill, decode_step,
+    init_cache, embed_input, lm_logits,
+)
+from repro.models.params import (  # noqa: F401
+    ParamDef, init_params, abstract_params, param_specs, count_params,
+)

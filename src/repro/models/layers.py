@@ -1,0 +1,206 @@
+"""Common transformer layers: RMSNorm, RoPE, GQA attention (full / sliding
+window / decode), gated MLP.
+
+All attention paths are query-chunked with online accumulation over KV so the
+peak score tensor is (B, C, H, T_kv) for a small chunk C — the pure-JAX
+"flash" pattern (the Pallas kernel in ``repro.kernels.swa_attention`` is the
+TPU-optimized equivalent for the windowed decode/prefill hot path).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.actx import constrain
+from repro.models.params import ParamDef
+
+COMPUTE_DTYPE = jnp.bfloat16
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Norms / embeddings / rope
+# ---------------------------------------------------------------------------
+
+def rmsnorm_def(d: int) -> ParamDef:
+    return ParamDef((d,), ("embed",), init="ones")
+
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) or (S,)."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)                       # (D/2,)
+    angles = positions[..., None].astype(jnp.float32) * freqs  # (..., S, D/2)
+    if angles.ndim == 2:  # (S, D/2) -> broadcast batch
+        angles = angles[None]
+    cos, sin = jnp.cos(angles)[:, :, None, :], jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Attention
+# ---------------------------------------------------------------------------
+
+def attention_defs(cfg) -> dict:
+    d, h, k, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    defs = {
+        # kv projections: shard the head dim when divisible, else REPLICATE
+        # (Megatron GQA convention) — row-parallel kv would force an
+        # activation all-reduce per projection for a tiny weight.
+        "wq": ParamDef((d, h, hd), ("embed", "heads", None)),
+        "wk": ParamDef((d, k, hd), (None, "kv_heads", None)),
+        "wv": ParamDef((d, k, hd), (None, "kv_heads", None)),
+        "wo": ParamDef((h, hd, d), ("heads", None, "embed")),
+    }
+    if cfg.qk_norm:
+        defs["q_norm"] = ParamDef((hd,), (None,), init="ones")
+        defs["k_norm"] = ParamDef((hd,), (None,), init="ones")
+    return defs
+
+
+def masked_attn_chunk(q, k, v, q_pos, k_pos, window, scale):
+    """One query chunk attending over a KV span (clean implementation).
+
+    q: (B, C, K, G, D); k/v: (B, T, K, D); positions absolute, k_pos == -1
+    marks invalid slots. Returns (B, C, K, G, D) fp32.
+
+    Matmuls take bf16 operands with fp32 accumulation (MXU-native); softmax
+    statistics are fp32.
+    """
+    scores = jnp.einsum(
+        "bckgd,btkd->bkgct", q, k, preferred_element_type=jnp.float32
+    ) * scale
+    if q_pos.ndim == 1:
+        q_pos = jnp.broadcast_to(q_pos[None], (q.shape[0], q_pos.shape[0]))
+    if k_pos.ndim == 1:
+        k_pos = jnp.broadcast_to(k_pos[None], (k.shape[0], k_pos.shape[0]))
+    mask = (q_pos[:, :, None] >= k_pos[:, None, :]) & (k_pos[:, None, :] >= 0)
+    if window:
+        mask = mask & ((q_pos[:, :, None] - k_pos[:, None, :]) < window)
+    scores = jnp.where(mask[:, None, None, :, :], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    row_valid = jnp.any(mask, axis=-1)                        # (B, C)
+    probs = probs * row_valid[:, None, None, :, None].astype(probs.dtype)
+    return jnp.einsum("bkgct,btkd->bckgd", probs.astype(v.dtype), v,
+                      preferred_element_type=jnp.float32)
+
+
+def gqa_attention(q, k, v, *, window: int = 0, chunk: int = 256,
+                  q_offset=0) -> jax.Array:
+    """Causal GQA attention, query-chunked.
+
+    q: (B, S, H, D); k/v: (B, T, K, D) with T >= S and query i at absolute
+    position q_offset + i (keys at positions 0..T-1).
+    For windowed attention each chunk only reads its (window + chunk) KV span
+    (sub-quadratic); full attention reads all T per chunk.
+    """
+    b, s, h, d = q.shape
+    t, nk = k.shape[1], k.shape[2]
+    g = h // nk
+    scale = d ** -0.5
+    c = min(chunk, s)
+    assert s % c == 0, (s, c)
+    nq = s // c
+    qc = q.reshape(b, nq, c, nk, g, d)
+    k_pos_all = jnp.arange(t)
+
+    def one_chunk(i, q_chunk):
+        q_pos = q_offset + i * c + jnp.arange(c)
+        if window and t > window + c:
+            span = window + c
+            # align the span so it covers [q_start - window + 1, q_end]
+            start = jnp.clip(q_offset + i * c + c - span, 0, t - span)
+            ks = jax.lax.dynamic_slice_in_dim(k, start, span, axis=1)
+            vs = jax.lax.dynamic_slice_in_dim(v, start, span, axis=1)
+            k_pos = start + jnp.arange(span)
+            return masked_attn_chunk(q_chunk, ks, vs, q_pos, k_pos, window, scale)
+        return masked_attn_chunk(q_chunk, k, v, q_pos, k_pos_all, window, scale)
+
+    if nq == 1:
+        out = one_chunk(0, qc[:, 0])[:, None]
+    else:
+        from repro.models.scan_utils import lmap
+        out = lmap(lambda args: one_chunk(args[0], args[1]),
+                   (jnp.arange(nq), qc.swapaxes(0, 1)))
+        out = out.swapaxes(0, 1)  # (B, nq, C, K, G, D)
+    return out.reshape(b, s, h, d).astype(q.dtype)
+
+
+def attention_block(params, cfg, x, positions, *, window: int,
+                    kv_cache=None, cache_index=None):
+    """Full attention sub-block: qkv proj, rope, attention, out proj.
+
+    Training/prefill: kv_cache is None -> attends within x, returns (out, kv).
+    Decode: kv_cache = (k_cache, v_cache) of shape (B, T, K, D), x is
+    (B, 1, d) and cache_index the write position -> returns (out, new_cache).
+    """
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    q = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt)),
+                  "attn_q")
+    k = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt)),
+                  "attn_kv")
+    v = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(dt)),
+                  "attn_kv")
+    if cfg.qk_norm:
+        q = rmsnorm(q, params["q_norm"], cfg.norm_eps)
+        k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    if kv_cache is None:
+        out = constrain(gqa_attention(q, k, v, window=window), "attn_q")
+        new_cache = (k, v)
+    else:
+        k_cache, v_cache = kv_cache
+        k_cache = jax.lax.dynamic_update_slice_in_dim(
+            k_cache, k.astype(k_cache.dtype), cache_index, axis=1)
+        v_cache = jax.lax.dynamic_update_slice_in_dim(
+            v_cache, v.astype(v_cache.dtype), cache_index, axis=1)
+        b, s, nk, _ = k_cache.shape
+        g = cfg.n_heads // nk
+        q5 = q.reshape(b, 1, nk, g, hd)
+        k_pos = jnp.arange(s)
+        # mask out slots not yet written
+        k_pos = jnp.where(k_pos <= cache_index, k_pos, -1)
+        out = masked_attn_chunk(
+            q5, k_cache.astype(dt), v_cache.astype(dt),
+            positions, k_pos, window, hd ** -0.5,
+        ).reshape(b, 1, cfg.n_heads, hd).astype(dt)
+        new_cache = (k_cache, v_cache)
+
+    out = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# Gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_defs(d: int, ff: int) -> dict:
+    return {
+        "w_gate": ParamDef((d, ff), ("embed", "ff")),
+        "w_up": ParamDef((d, ff), ("embed", "ff")),
+        "w_down": ParamDef((ff, d), ("ff", "embed")),
+    }
+
+
+def mlp_block(params, x):
+    dt = x.dtype
+    gate = jax.nn.silu(constrain(x @ params["w_gate"].astype(dt),
+                                 "ffn_hidden"))
+    up = constrain(x @ params["w_up"].astype(dt), "ffn_hidden")
+    return (gate * up) @ params["w_down"].astype(dt)

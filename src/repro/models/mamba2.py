@@ -1,0 +1,181 @@
+"""Mamba2 (SSD) block — chunked parallel scan formulation.
+
+State-space recurrence per head h (scalar decay a_t, state S in R^{hd x N}):
+
+    S_t = a_t * S_{t-1} + dt_t * x_t (x) B_t          a_t = exp(A_h * dt_t)
+    y_t = S_t @ C_t + D_h * x_t
+
+The chunked form computes, for chunk length C:
+  * intra-chunk: y_t += sum_{j<=t} exp(cum_t - cum_j) * (C_t . B_j) dt_j x_j
+    via a (C, C) decay-masked attention-like matrix per head (MXU matmuls),
+  * inter-chunk: carried state S contributes y_t += exp(cum_t) * S_prev @ C_t,
+    and S is updated once per chunk — `lax.scan` over chunks keeps the HLO
+    compact for the 81-layer zamba2 stack.
+
+Sharding (§Perf iteration zamba2/1): projections are SPLIT (z, x, dt
+column-parallel over `model`; B/C replicated — they are tiny and shared
+across heads) instead of one fused in_proj whose output dim (2*di+2n+h)
+doesn't divide the model axis. The fused form forced XLA to replicate every
+mamba activation across all 16 model shards (~16x HBM traffic + an
+all-reduce per projection); the split form keeps the inner di dim and the
+head dim sharded end-to-end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.actx import constrain
+from repro.models.params import ParamDef
+
+CHUNK = 128
+
+
+def mamba2_defs(cfg) -> dict:
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    return {
+        "z_proj": ParamDef((d, di), ("embed", "dinner")),
+        "x_proj": ParamDef((d, di), ("embed", "dinner")),
+        "b_proj": ParamDef((d, n), (None, None)),       # tiny: replicate
+        "c_proj": ParamDef((d, n), (None, None)),
+        "dt_proj": ParamDef((d, h), (None, "heads")),
+        "conv_x_w": ParamDef((cfg.conv_width, di), (None, "dinner"),
+                             scale=cfg.conv_width ** -0.5),
+        "conv_x_b": ParamDef((di,), ("dinner",), init="zeros"),
+        "conv_bc_w": ParamDef((cfg.conv_width, 2 * n), (None, None),
+                              scale=cfg.conv_width ** -0.5),
+        "conv_bc_b": ParamDef((2 * n,), (None,), init="zeros"),
+        "a_log": ParamDef((h,), ("heads",), init="constant", constant=0.0),
+        "dt_bias": ParamDef((h,), ("heads",), init="zeros"),
+        "d_skip": ParamDef((h,), ("heads",), init="ones"),
+        "gate_norm": ParamDef((di,), ("dinner",), init="ones"),
+        "out_proj": ParamDef((di, d), ("dinner", "embed")),
+    }
+
+
+def _causal_conv(x, w, b, carry=None):
+    """Depthwise causal conv. x: (B, T, Cd); w: (W, Cd). carry: (B, W-1, Cd)
+    of trailing inputs from the previous segment (for decode)."""
+    width = w.shape[0]
+    if carry is None:
+        pad = jnp.zeros((x.shape[0], width - 1, x.shape[2]), x.dtype)
+    else:
+        pad = carry.astype(x.dtype)
+    xp = jnp.concatenate([pad, x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i] for i in range(width))
+    new_carry = xp[:, -(width - 1):]
+    return jax.nn.silu(out + b), new_carry
+
+
+def ssd_chunked(xh, a, bmat, cmat, state0=None):
+    """Chunked SSD scan.
+
+    xh:   (B, T, H, hd)   inputs (already dt-scaled)
+    a:    (B, T, H)       per-step log-decay (<= 0)
+    bmat: (B, T, N)       input projection (shared across heads)
+    cmat: (B, T, N)       output projection
+    state0: (B, H, hd, N) or None
+    Returns (y (B,T,H,hd), final_state).
+    """
+    b, t, h, hd = xh.shape
+    n = bmat.shape[-1]
+    c = min(CHUNK, t)
+    assert t % c == 0, (t, c)
+    nc = t // c
+    xh = xh.reshape(b, nc, c, h, hd)
+    a = a.reshape(b, nc, c, h)
+    bmat = bmat.reshape(b, nc, c, n)
+    cmat = cmat.reshape(b, nc, c, n)
+    if state0 is None:
+        state0 = jnp.zeros((b, h, hd, n), jnp.float32)
+
+    def step(state, inp):
+        xc, ac, bc, cc = inp  # (b,c,h,hd), (b,c,h), (b,c,n), (b,c,n)
+        cum = jnp.cumsum(ac, axis=1)                      # (b,c,h) inclusive
+        # intra-chunk: decay matrix L[t,j] = exp(cum_t - cum_j), j <= t
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]   # (b,c,c,h)
+        mask = jnp.tril(jnp.ones((c, c), bool))
+        lmat = jnp.where(mask[None, :, :, None], jnp.exp(ldiff), 0.0)
+        cb = jnp.einsum("btn,bjn->btj", cc, bc,
+                        preferred_element_type=jnp.float32)  # (b,c,c)
+        amat = cb[:, :, :, None] * lmat                   # (b,c,c,h)
+        y = jnp.einsum("btjh,bjhd->bthd", amat.astype(xc.dtype), xc,
+                       preferred_element_type=jnp.float32)
+        # inter-chunk: contribution of carried state
+        decay_t = jnp.exp(cum)                            # (b,c,h)
+        y = y + jnp.einsum("bth,bhdn,btn->bthd",
+                           decay_t, state, cc.astype(jnp.float32))
+        # state update
+        decay_rest = jnp.exp(cum[:, -1:, :] - cum)        # (b,c,h)
+        kd = bc[:, :, None, :] * decay_rest[..., None]    # (b,c,h,n)
+        new_state = jnp.exp(cum[:, -1])[:, :, None, None] * state + \
+            jnp.einsum("bchn,bchd->bhdn", kd, xc.astype(jnp.float32))
+        return new_state, y.astype(xc.dtype)
+
+    xs = (xh.swapaxes(0, 1), a.swapaxes(0, 1),
+          bmat.swapaxes(0, 1), cmat.swapaxes(0, 1))
+    from repro.models.scan_utils import scan as _scan
+    final, ys = _scan(step, state0, xs)
+    y = ys.swapaxes(0, 1).reshape(b, t, h, hd)
+    return y, final
+
+
+def mamba2_block(params, cfg, x, *, state=None):
+    """x: (B, T, d). state: None (train/prefill) or dict(conv_x, conv_bc,
+    ssm) for decode continuation. Returns (out (B,T,d), new_state)."""
+    b, t, d = x.shape
+    dt_ = x.dtype
+    di = cfg.ssm_expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    hd = di // h
+
+    z = constrain(x @ params["z_proj"].astype(dt_), "ssm_inner")
+    xin = constrain(x @ params["x_proj"].astype(dt_), "ssm_inner")
+    bc = jnp.concatenate(
+        [x @ params["b_proj"].astype(dt_), x @ params["c_proj"].astype(dt_)],
+        axis=-1)
+    dt_raw = x @ params["dt_proj"].astype(dt_)            # (B,T,H)
+
+    cx = None if state is None else state["conv_x"]
+    cbc = None if state is None else state["conv_bc"]
+    xin, new_cx = _causal_conv(
+        xin, params["conv_x_w"].astype(dt_), params["conv_x_b"].astype(dt_),
+        cx)
+    xin = constrain(xin, "ssm_inner")
+    bc, new_cbc = _causal_conv(
+        bc, params["conv_bc_w"].astype(dt_), params["conv_bc_b"].astype(dt_),
+        cbc)
+    bmat, cmat = jnp.split(bc, 2, axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])            # (B,T,H)
+    a_neg = -jnp.exp(params["a_log"])                    # (H,) < 0
+    log_decay = dt * a_neg                               # (B,T,H) <= 0
+
+    xh = constrain(xin.reshape(b, t, h, hd) * dt[..., None].astype(dt_),
+                   "ssm_heads")
+    ssm0 = None if state is None else state["ssm"]
+    y, new_ssm = ssd_chunked(xh, log_decay, bmat, cmat, ssm0)
+    y = constrain(y, "ssm_heads") \
+        + params["d_skip"].astype(dt_)[None, None, :, None] \
+        * xin.reshape(b, t, h, hd)
+    y = y.reshape(b, t, di)
+
+    from repro.models.layers import rmsnorm
+    y = rmsnorm(y * jax.nn.silu(z), params["gate_norm"], cfg.norm_eps)
+    out = y @ params["out_proj"].astype(dt_)
+    new_state = {"conv_x": new_cx, "conv_bc": new_cbc, "ssm": new_ssm}
+    return out, new_state
+
+
+def mamba2_init_state(cfg, batch: int):
+    d = cfg.d_model
+    di = cfg.ssm_expand * d
+    n, h = cfg.ssm_state, cfg.ssm_heads
+    return {
+        "conv_x": jnp.zeros((batch, cfg.conv_width - 1, di), jnp.float32),
+        "conv_bc": jnp.zeros((batch, cfg.conv_width - 1, 2 * n), jnp.float32),
+        "ssm": jnp.zeros((batch, h, di // h, n), jnp.float32),
+    }

@@ -1,0 +1,97 @@
+"""GShard-style capacity-based Mixture-of-Experts layer.
+
+TPU-native formulation: routing produces dense dispatch/combine tensors and
+the expert FFN is a batched einsum with the expert dim sharded over the
+``model`` mesh axis (expert parallelism). When tokens are sharded over the
+``data`` axis and experts over ``model``, XLA lowers the dispatch einsums to
+all-to-all / collective-permute schedules — the MoE communication pattern the
+roofline's collective term tracks.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.actx import constrain
+from repro.models.params import ParamDef
+
+# Tokens are routed within fixed-size groups so the dispatch tensor is
+# O(tokens * k * capacity_factor) rather than O(tokens * seq * ...).
+GROUP_SIZE = 512
+
+
+def moe_defs(cfg) -> dict:
+    d, e, ff = cfg.d_model, cfg.n_experts, cfg.expert_d_ff
+    return {
+        "router": ParamDef((d, e), ("embed", None), scale=d ** -0.5),
+        "w_gate": ParamDef((e, d, ff), ("experts", "embed", "ff")),
+        "w_up": ParamDef((e, d, ff), ("experts", "embed", "ff")),
+        "w_down": ParamDef((e, ff, d), ("experts", "ff", "embed")),
+    }
+
+
+def capacity(group: int, k: int, n_experts: int, factor: float) -> int:
+    cap = int(group * k * factor / n_experts)
+    return max(4, -(-cap // 4) * 4)  # round up to a multiple of 4
+
+
+def route(router_logits: jax.Array, k: int, cap: int):
+    """Top-k routing with per-expert capacity.
+
+    router_logits: (G, T, E). Returns (dispatch (G,T,E,C) bool-ish,
+    combine (G,T,E,C) f32, aux_loss scalar).
+    """
+    g, t, e = router_logits.shape
+    probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
+    topk_probs, topk_idx = jax.lax.top_k(probs, k)            # (G, T, k)
+    topk_probs = topk_probs / jnp.sum(topk_probs, axis=-1, keepdims=True)
+
+    # load-balancing auxiliary loss (Switch/GShard form)
+    me = jnp.mean(probs, axis=1)                               # (G, E)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(topk_idx, e), axis=2), axis=1)  # (G, E)
+    aux = jnp.mean(me * ce) * e * e
+
+    # position of each (token, choice) within its expert's capacity buffer
+    sel = jax.nn.one_hot(topk_idx, e, dtype=jnp.int32)         # (G, T, k, E)
+    flat = sel.reshape(g, t * k, e)
+    pos_in_expert = jnp.cumsum(flat, axis=1) - flat            # (G, T*k, E)
+    pos = jnp.sum(pos_in_expert * flat, axis=-1).reshape(g, t, k)
+    fits = pos < cap
+
+    w = topk_probs * fits.astype(topk_probs.dtype)             # (G, T, k)
+    onehot_cap = jax.nn.one_hot(jnp.where(fits, pos, cap), cap + 1,
+                                dtype=jnp.float32)[..., :cap]  # (G,T,k,C)
+    # (G, T, E, C)
+    combine = jnp.einsum("gtk,gtke,gtkc->gtec", w,
+                         sel.astype(jnp.float32), onehot_cap)
+    dispatch = jnp.einsum("gtke,gtkc->gtec", sel.astype(jnp.float32),
+                          onehot_cap * fits[..., None].astype(jnp.float32))
+    return dispatch, combine, aux
+
+
+def moe_block(params, cfg, x: jax.Array):
+    """x: (B, S, d) -> (B, S, d), plus aux loss."""
+    b, s, d = x.shape
+    dt = x.dtype
+    e, k = cfg.n_experts, cfg.experts_per_token
+    tokens = x.reshape(-1, d)
+    n = tokens.shape[0]
+    gsz = min(GROUP_SIZE, n)
+    assert n % gsz == 0, (n, gsz)
+    groups = tokens.reshape(n // gsz, gsz, d)
+
+    logits = jnp.einsum("gtd,de->gte", groups, params["router"].astype(dt))
+    cap = capacity(gsz, k, e, cfg.capacity_factor)
+    dispatch, combine, aux = route(logits, k, cap)
+
+    xe = constrain(jnp.einsum("gtec,gtd->egcd", dispatch.astype(dt),
+                              groups), "moe_expert")
+    gate = jax.nn.silu(constrain(jnp.einsum(
+        "egcd,edf->egcf", xe, params["w_gate"].astype(dt)), "moe_hidden"))
+    up = constrain(jnp.einsum("egcd,edf->egcf", xe,
+                              params["w_up"].astype(dt)), "moe_hidden")
+    out_e = constrain(jnp.einsum("egcf,efd->egcd", gate * up,
+                                 params["w_down"].astype(dt)), "moe_expert")
+    out = jnp.einsum("egcd,gtec->gtd", out_e, combine.astype(dt))
+    return out.reshape(b, s, d), aux

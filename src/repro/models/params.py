@@ -1,0 +1,152 @@
+"""Parameter-definition system.
+
+Models declare their parameters as trees of :class:`ParamDef` (shape + init +
+logical axis names). From one declaration we derive:
+
+  * ``init_params``   — PRNG-keyed materialization (pure jnp, usable under
+    ``jax.eval_shape`` for allocation-free dry-runs),
+  * ``param_specs``   — ``PartitionSpec`` tree for a given mesh, resolved from
+    logical axis names with divisibility-aware fallback,
+  * ``abstract_params`` — ``ShapeDtypeStruct`` tree.
+
+Logical axes and their mesh-axis candidates (first divisible dim in priority
+order wins the ``model`` axis; optionally a second dim is sharded over the
+``data``(+``pod``) axes for FSDP/ZeRO-style parameter sharding):
+
+  experts > vocab > heads > kv_heads > ff > dinner > embed   -> "model"
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+# Priority order for assigning the tensor-parallel ("model") mesh axis.
+MODEL_AXIS_PRIORITY = (
+    "experts", "vocab", "heads", "kv_heads", "ff", "dinner", "state", "embed",
+)
+# Logical axes eligible for FSDP ("data"-axis) parameter sharding, i.e. large
+# dims that remain after the model axis is assigned.
+FSDP_AXIS_CANDIDATES = (
+    "embed", "ff", "dinner", "vocab", "heads", "kv_heads", "experts",
+)
+# Axes that must never be sharded (stacking / small structural dims).
+UNSHARDED = ("layers", "chunk", "window", None)
+
+
+@dataclass(frozen=True)
+class ParamDef:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]           # logical name per dim
+    init: str = "normal"                   # normal | zeros | ones | constant
+    scale: float | None = None             # normal: stddev (None => 1/sqrt fan_in)
+    constant: float = 0.0
+    dtype: Any = jnp.float32
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+    def materialize(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "constant":
+            return jnp.full(self.shape, self.constant, self.dtype)
+        if self.init == "normal":
+            fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+            std = self.scale if self.scale is not None else fan_in ** -0.5
+            return (std * jax.random.normal(key, self.shape)).astype(self.dtype)
+        raise ValueError(self.init)
+
+
+def is_param_def(x) -> bool:
+    return isinstance(x, ParamDef)
+
+
+def stack_defs(defs, n: int):
+    """Add a leading stacked-layers dim of size ``n`` to every ParamDef."""
+    return jax.tree.map(
+        lambda d: dataclasses.replace(d, shape=(n, *d.shape), axes=("layers", *d.axes)),
+        defs,
+        is_leaf=is_param_def,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Spec resolution
+# ---------------------------------------------------------------------------
+
+def resolve_spec(d: ParamDef, axis_sizes: dict[str, int], fsdp_axes: tuple[str, ...] = ()) -> P:
+    """Map logical axes to mesh axes for one parameter."""
+    model_size = axis_sizes.get("model", 1)
+    fsdp_size = 1
+    for a in fsdp_axes:
+        fsdp_size *= axis_sizes.get(a, 1)
+
+    assignment: dict[int, Any] = {}
+
+    # 1) model axis -> highest-priority divisible dim
+    if model_size > 1:
+        ranked = sorted(
+            (i for i, ax in enumerate(d.axes) if ax in MODEL_AXIS_PRIORITY),
+            key=lambda i: MODEL_AXIS_PRIORITY.index(d.axes[i]),
+        )
+        for i in ranked:
+            if d.shape[i] % model_size == 0 and d.shape[i] >= model_size:
+                assignment[i] = "model"
+                break
+
+    # 2) fsdp (data/pod) axis -> largest remaining eligible dim
+    if fsdp_size > 1 and fsdp_axes:
+        cands = [
+            i for i, ax in enumerate(d.axes)
+            if ax in FSDP_AXIS_CANDIDATES and i not in assignment
+            and d.shape[i] % fsdp_size == 0 and d.shape[i] >= fsdp_size
+        ]
+        if cands:
+            i = max(cands, key=lambda i: d.shape[i])
+            assignment[i] = fsdp_axes if len(fsdp_axes) > 1 else fsdp_axes[0]
+
+    return P(*(assignment.get(i) for i in range(len(d.shape))))
+
+
+def param_specs(defs, axis_sizes: dict[str, int], fsdp_axes: tuple[str, ...] = ()):
+    return jax.tree.map(
+        lambda d: resolve_spec(d, axis_sizes, fsdp_axes), defs, is_leaf=is_param_def
+    )
+
+
+# ---------------------------------------------------------------------------
+# Materialization
+# ---------------------------------------------------------------------------
+
+def _path_str(path) -> str:
+    return "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in path)
+
+
+def init_params(defs, key: jax.Array):
+    """Materialize a ParamDef tree; per-leaf keys derive from the tree path so
+    the result is insertion-order independent."""
+
+    def leaf(path, d: ParamDef):
+        k = jax.random.fold_in(key, hash(_path_str(path)) % (2**31))
+        return d.materialize(k)
+
+    return jax.tree_util.tree_map_with_path(leaf, defs, is_leaf=is_param_def)
+
+
+def abstract_params(defs):
+    return jax.tree.map(
+        lambda d: jax.ShapeDtypeStruct(d.shape, d.dtype), defs, is_leaf=is_param_def
+    )
+
+
+def count_params(defs) -> int:
+    import math
+    leaves = jax.tree.leaves(defs, is_leaf=is_param_def)
+    return sum(math.prod(d.shape) for d in leaves)

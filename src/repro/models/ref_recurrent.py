@@ -1,0 +1,54 @@
+"""Sequential (one-timestep-at-a-time) reference recurrences.
+
+The production Mamba2/RWKV6 blocks use chunked parallel forms (MXU-friendly,
+compile-compact); these step-by-step references implement the *defining*
+recurrences directly, so tests can assert the chunked algebra is exactly the
+recurrence — the strongest correctness check an SSM layer can have.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_sequential(xh, a, bmat, cmat, state0=None):
+    """Mamba2 SSD, stepwise:  S_t = exp(a_t) S_{t-1} + x_t (x) B_t,
+    y_t = S_t @ C_t.   Shapes as ssd_chunked."""
+    b, t, h, hd = xh.shape
+    n = bmat.shape[-1]
+    if state0 is None:
+        state0 = jnp.zeros((b, h, hd, n), jnp.float32)
+
+    def step(state, inp):
+        x_t, a_t, b_t, c_t = inp                        # (b,h,hd),(b,h),(b,n)
+        decay = jnp.exp(a_t)[:, :, None, None]
+        state = decay * state + jnp.einsum(
+            "bhd,bn->bhdn", x_t.astype(jnp.float32), b_t.astype(jnp.float32))
+        y = jnp.einsum("bhdn,bn->bhd", state, c_t.astype(jnp.float32))
+        return state, y
+
+    xs = (xh.swapaxes(0, 1), a.swapaxes(0, 1), bmat.swapaxes(0, 1),
+          cmat.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(xh.dtype), final
+
+
+def wkv6_sequential(r, k, v, log_w, u, state0=None):
+    """RWKV6 WKV, stepwise:  o_t = r_t . (S_{t-1} + diag(u) k_t (x) v_t);
+    S_t = diag(w_t) S_{t-1} + k_t (x) v_t.   Shapes as wkv6_chunked."""
+    b, t, h, n = r.shape
+    if state0 is None:
+        state0 = jnp.zeros((b, h, n, n), jnp.float32)
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = (x.astype(jnp.float32) for x in inp)  # (b,h,n)
+        kv = jnp.einsum("bhn,bhm->bhnm", k_t, v_t)
+        o = jnp.einsum("bhn,bhnm->bhm", r_t,
+                       state + u[None, :, :, None] * kv)
+        state = jnp.exp(w_t)[..., None] * state + kv
+        return state, o
+
+    xs = (r.swapaxes(0, 1), k.swapaxes(0, 1), v.swapaxes(0, 1),
+          log_w.swapaxes(0, 1))
+    final, ys = jax.lax.scan(step, state0, xs)
+    return ys.swapaxes(0, 1).astype(r.dtype), final

@@ -1,0 +1,39 @@
+"""Scan wrappers with a cost-lowering unroll switch.
+
+XLA's ``cost_analysis`` counts a ``while`` body ONCE regardless of trip
+count, which would silently under-report FLOPs/bytes/collectives for every
+scanned structure (layer stacks, attention query chunks, SSM time chunks).
+For the roofline cost lowerings the dry-run flips ``set_cost_unroll(True)``
+so every model scan fully unrolls (reduced-depth configs keep this tractable)
+and the counts are exact; production/compile-proof lowerings keep compact
+``while`` loops.
+"""
+from __future__ import annotations
+
+import jax
+
+_COST_UNROLL = False
+
+
+def set_cost_unroll(value: bool) -> None:
+    global _COST_UNROLL
+    _COST_UNROLL = bool(value)
+
+
+def cost_unroll_enabled() -> bool:
+    return _COST_UNROLL
+
+
+def scan(body, carry, xs, **kw):
+    if _COST_UNROLL:
+        kw = dict(kw, unroll=True)
+    return jax.lax.scan(body, carry, xs, **kw)
+
+
+def lmap(fn, xs):
+    if _COST_UNROLL:
+        import jax.numpy as jnp
+        n = jax.tree.leaves(xs)[0].shape[0]
+        ys = [fn(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
+        return jax.tree.map(lambda *zs: jnp.stack(zs), *ys)
+    return jax.lax.map(fn, xs)

@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (  # noqa: F401
+    Optimizer, sgd, momentum, adam, apply_updates, global_norm, clip_by_global_norm,
+)
+from repro.optim.schedules import (  # noqa: F401
+    constant, cosine_decay, warmup_cosine, paper_nonconvex_lr, paper_strongly_convex_lr,
+)

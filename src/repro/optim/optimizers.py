@@ -1,0 +1,107 @@
+"""Pure-JAX optimizers (no optax in this container).
+
+An :class:`Optimizer` is an (init, update) pair over pytrees, mirroring the
+optax GradientTransformation contract so the trainer is optimizer-agnostic.
+The paper's experiments use SGD with momentum 0.9 (and *no* momentum for the
+variance-bounded scheduler runs) — both are first-class here; Adam is
+provided for the LM workloads.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Optimizer(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def _zeros_like_tree(params):
+    return jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+
+
+def sgd(lr) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        a = lr_fn(state["count"])
+        updates = jax.tree.map(lambda g: -a * g, grads)
+        return updates, {"count": state["count"] + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32), "mu": _zeros_like_tree(params)}
+
+    def update(grads, state, params=None):
+        mu = jax.tree.map(lambda m, g: beta * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: g + beta * m, mu, grads)
+        else:
+            upd = mu
+        a = lr_fn(state["count"])
+        updates = jax.tree.map(lambda u: -a * u, upd)
+        return updates, {"count": state["count"] + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(lr, b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8,
+         weight_decay: float = 0.0) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda _: lr)
+
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": _zeros_like_tree(params),
+            "v": _zeros_like_tree(params),
+        }
+
+    def update(grads, state, params=None):
+        c = state["count"] + 1
+        m = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g, state["m"], grads)
+        v = jax.tree.map(lambda v, g: b2 * v + (1 - b2) * jnp.square(g),
+                         state["v"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        a = lr_fn(state["count"])
+
+        def u(m, v, p):
+            upd = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+            if weight_decay and p is not None:
+                upd = upd + weight_decay * p
+            return -a * upd
+
+        if params is None:
+            updates = jax.tree.map(lambda m, v: u(m, v, None), m, v)
+        else:
+            updates = jax.tree.map(u, m, v, params)
+        return updates, {"count": c, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree.leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(grads, max_norm: float):
+    norm = global_norm(grads)
+    scale = jnp.minimum(1.0, max_norm / (norm + 1e-12))
+    return jax.tree.map(lambda g: g * scale, grads), norm

@@ -1,0 +1,37 @@
+"""Learning-rate schedules, including the paper's theorem-prescribed rates."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def constant(lr: float):
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def cosine_decay(base: float, total_steps: int, final_frac: float = 0.1):
+    def fn(step):
+        t = jnp.clip(step / total_steps, 0.0, 1.0)
+        cos = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base * (final_frac + (1 - final_frac) * cos)
+    return fn
+
+
+def warmup_cosine(base: float, warmup: int, total_steps: int,
+                  final_frac: float = 0.1):
+    cos = cosine_decay(base, max(total_steps - warmup, 1), final_frac)
+
+    def fn(step):
+        w = jnp.minimum(step / max(warmup, 1), 1.0)
+        return w * cos(jnp.maximum(step - warmup, 0))
+    return fn
+
+
+def paper_nonconvex_lr(T: int, p: int = 1):
+    """Theorem 2 (p=1) / Theorem 3 (parallel steps): alpha = sqrt(p/T)."""
+    return constant((p / T) ** 0.5)
+
+
+def paper_strongly_convex_lr(T: int, c: float, p: int = 1):
+    """Theorem 4/5: alpha = 2(log T + log p)/(cT)."""
+    import math
+    return constant(2 * (math.log(T) + math.log(p)) / (c * T))

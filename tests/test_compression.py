@@ -1,0 +1,94 @@
+"""Property tests for the compression operators (paper Eq. 25 and App. B.7).
+
+The contraction property ||Q(w) - w||^2 <= gamma ||w||^2 is *the* hypothesis
+the elastic-consistency bound for EF methods rests on (Lemma 18) — it is
+checked here over random vectors via hypothesis.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import compression as C
+
+settings.register_profile("ci", max_examples=30, deadline=None)
+settings.load_profile("ci")
+
+
+def _vec(draw, n):
+    raw = draw(st.lists(
+        st.floats(-100.0, 100.0, allow_nan=False, width=32),
+        min_size=n, max_size=n))
+    return jnp.asarray(raw, jnp.float32)
+
+
+@given(st.data(), st.integers(8, 64), st.integers(1, 8))
+def test_topk_contraction(data, n, k):
+    k = min(k, n)
+    w = _vec(data.draw, n)
+    q = C.topk_q(w, k)
+    lhs = float(jnp.sum((q - w) ** 2))
+    rhs = C.topk_gamma(n, k) * float(jnp.sum(w ** 2))
+    assert lhs <= rhs + 1e-4
+
+
+@given(st.data(), st.integers(8, 64))
+def test_onebit_contraction(data, n):
+    w = _vec(data.draw, n)
+    q = C.onebit_q(w)
+    lhs = float(jnp.sum((q - w) ** 2))
+    rhs = C.onebit_gamma(n) * float(jnp.sum(w ** 2))
+    assert lhs <= rhs + 1e-4
+
+
+@given(st.data(), st.integers(8, 64))
+def test_onebit_wire_roundtrip(data, n):
+    w = _vec(data.draw, n)
+    packed, mp, mn = C.onebit_compress(w)
+    dense = C.onebit_decompress(packed, mp, mn, n)
+    assert np.allclose(np.asarray(dense), np.asarray(C.onebit_q(w)),
+                       atol=1e-5)
+
+
+def test_qsgd_unbiased():
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (64,))
+    qs = jnp.stack([C.qsgd_q(w, jax.random.fold_in(key, i), levels=4)
+                    for i in range(2000)])
+    err = float(jnp.max(jnp.abs(jnp.mean(qs, axis=0) - w)))
+    assert err < 0.15, err
+
+
+@given(st.data(), st.integers(16, 64), st.integers(2, 30))
+def test_error_feedback_telescopes(data, n, steps):
+    """Sum of payloads + final residual == sum of updates (Alg 6 identity):
+    nothing is ever lost, only delayed — the EF guarantee."""
+    comp = C.topk_compressor(0.25)
+    err = jnp.zeros(n)
+    total_updates = jnp.zeros(n)
+    total_payload = jnp.zeros(n)
+    for i in range(steps):
+        u = _vec(data.draw, n) * 0.1
+        payload, err = C.ef_compress(comp, u, err)
+        total_updates += u
+        total_payload += payload
+    assert np.allclose(np.asarray(total_payload + err),
+                       np.asarray(total_updates), atol=1e-3)
+
+
+def test_ef_residual_bounded():
+    """Residual norm stays bounded across many steps (Lemma 18's invariant:
+    E||eps||^2 <= (2-g)g/(1-g)^3 M^2 alpha^2)."""
+    comp = C.topk_compressor(0.25)
+    key = jax.random.PRNGKey(1)
+    n, alpha = 128, 0.1
+    gamma = C.topk_gamma(n, 32)
+    m2 = 1.0 * n  # E||g||^2 for unit-variance entries... scaled below
+    err = jnp.zeros(n)
+    norms = []
+    for i in range(300):
+        g = jax.random.normal(jax.random.fold_in(key, i), (n,))
+        _, err = C.ef_compress(comp, alpha * g, err)
+        norms.append(float(jnp.sum(err ** 2)))
+    bound = (2 - gamma) * gamma / (1 - gamma) ** 3 * (alpha ** 2) * n
+    assert max(norms[50:]) <= bound * 1.05, (max(norms[50:]), bound)

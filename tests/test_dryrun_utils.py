@@ -1,0 +1,83 @@
+"""Dry-run harness unit tests: HLO collective parser, seq fitting, depth
+selection, skip gating, and input_specs shapes (no 512-device mesh needed)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+# dryrun sets XLA_FLAGS at import; importing in-process is fine because this
+# test session never builds the 512-device mesh (flag only affects first
+# backend init — tests here are pure python).
+from repro.launch import dryrun as DR
+from repro.configs import INPUT_SHAPES, get_config
+
+
+HLO = """
+ENTRY %main {
+  %ar = f32[16,4096,2048]{2,1,0} all-reduce(f32[16,4096,2048] %x), replica_groups={}
+  %ag.1 = bf16[32,128]{1,0} all-gather(bf16[2,128] %y), dimensions={0}
+  %tup = (f32[8,8]{1,0}, f32[8]{0}) all-reduce(f32[8,8] %a, f32[8] %b)
+  %cp = f32[4,4]{1,0} collective-permute(f32[4,4] %z)
+  %ars = f32[2,2]{1,0} all-reduce-start(f32[2,2] %w)
+  %fusion.1 = f32[4]{0} fusion(%all-gather.55, %c), kind=kLoop
+  %gte = f32[9,9]{1,0} get-tuple-element(%all-reduce.548), index=1
+}
+"""
+
+
+def test_collective_parser_counts_and_weights():
+    out = DR.collective_bytes(HLO)
+    assert out["all-reduce"] == 2 * (16 * 4096 * 2048 * 4) \
+        + 2 * (8 * 8 * 4 + 8 * 4) + 2 * (2 * 2 * 4)
+    assert out["all-gather"] == 32 * 128 * 2
+    assert out["collective-permute"] == 4 * 4 * 4
+    # operand mentions (fusion, get-tuple-element) must NOT count
+    total = sum(v for k, v in out.items() if k != "total")
+    assert out["total"] == total
+
+
+def test_fit_seq_linear_and_quadratic():
+    lin = {1024: 10.0, 2048: 20.0, 4096: 40.0}
+    assert abs(DR._fit_seq(lin, 32768) - 320.0) < 1e-6
+    quad = {s: 2.0 * s * s for s in (1024, 2048, 4096)}
+    assert abs(DR._fit_seq(quad, 8192) - 2.0 * 8192 ** 2) < 1.0
+
+
+def test_reduced_depths_zero_base():
+    assert DR.reduced_depths(get_config("qwen3-1.7b")) == (0, 1)
+    assert DR.reduced_depths(get_config("gemma3-27b")) == (0, 6)
+    assert DR.reduced_depths(get_config("zamba2-7b")) == (0, 6)
+
+
+def test_should_skip_long500k_gating():
+    long = INPUT_SHAPES["long_500k"]
+    assert DR.should_skip(get_config("mistral-nemo-12b"), long) is not None
+    assert DR.should_skip(get_config("qwen3-1.7b"), long) is not None
+    for a in ("rwkv6-1.6b", "zamba2-7b", "mixtral-8x7b", "gemma3-27b"):
+        assert DR.should_skip(get_config(a), long) is None
+    assert DR.should_skip(get_config("qwen3-1.7b"),
+                          INPUT_SHAPES["train_4k"]) is None
+
+
+@pytest.mark.parametrize("arch,shape", [
+    ("qwen3-1.7b", "train_4k"), ("internvl2-2b", "prefill_32k"),
+    ("musicgen-large", "train_4k"), ("rwkv6-1.6b", "decode_32k"),
+])
+def test_input_specs_shapes(arch, shape):
+    cfg = get_config(arch)
+    s = INPUT_SHAPES[shape]
+    from repro.models.transformer import RunFlags
+    specs = DR.input_specs(cfg, s, RunFlags(remat=False))
+    b = specs["batch"]
+    if s.kind == "decode":
+        assert b["tokens"].shape == (s.global_batch, 1)
+        assert "cache" in specs
+        assert len(jax.tree.leaves(specs["cache"])) > 1  # pos + state/kv
+    else:
+        assert b["tokens"].shape == (s.global_batch, s.seq_len)
+    if cfg.frontend == "vision" and s.kind != "decode":
+        assert b["patch_embeds"].shape == (
+            s.global_batch, cfg.n_prefix_embeds, cfg.d_model)
+    if cfg.frontend == "audio" and s.kind != "decode":
+        assert b["frame_embeds"].shape == (
+            s.global_batch, s.seq_len, cfg.d_model)

@@ -1,0 +1,62 @@
+"""MoE routing invariants (GShard capacity dispatch)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models.moe import capacity, moe_block, route
+from repro.models.params import init_params
+from repro.models.transformer import model_defs
+
+
+def _router_inputs(g=2, t=64, e=8, seed=0):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.normal(key, (g, t, e))
+
+
+@pytest.mark.parametrize("k", [1, 2, 4])
+def test_capacity_never_exceeded(k):
+    logits = _router_inputs()
+    cap = capacity(64, k, 8, 1.25)
+    dispatch, combine, aux = route(logits, k, cap)
+    # per-(group, expert, slot): at most one token
+    per_slot = jnp.sum(dispatch, axis=1)          # (G, E, C)
+    assert float(jnp.max(per_slot)) <= 1.0 + 1e-6
+    # per-token: at most k dispatched copies
+    per_token = jnp.sum(dispatch, axis=(2, 3))    # (G, T)
+    assert float(jnp.max(per_token)) <= k + 1e-6
+
+
+def test_combine_weights_normalized():
+    logits = _router_inputs()
+    cap = capacity(64, 2, 8, 1.25)
+    dispatch, combine, aux = route(logits, 2, cap)
+    w = jnp.sum(combine, axis=(2, 3))             # (G, T) sum of gate weights
+    assert float(jnp.max(w)) <= 1.0 + 1e-5
+    # combine is nonzero only where dispatch is
+    assert float(jnp.max(jnp.where(dispatch == 0, combine, 0.0))) < 1e-6
+
+
+def test_aux_loss_minimized_by_uniform_router():
+    e = 8
+    uniform = jnp.zeros((2, 64, e))
+    skewed = jnp.zeros((2, 64, e)).at[..., 0].set(10.0)
+    cap = capacity(64, 2, e, 1.25)
+    _, _, aux_u = route(uniform, 2, cap)
+    _, _, aux_s = route(skewed, 2, cap)
+    assert float(aux_s) > float(aux_u)
+
+
+def test_moe_block_capacity_drop_is_graceful():
+    """With capacity factor << 1 tokens drop but outputs stay finite."""
+    import dataclasses
+    cfg = dataclasses.replace(get_config("mixtral-8x7b").reduced(),
+                              capacity_factor=0.25)
+    params = init_params(model_defs(cfg), jax.random.PRNGKey(0))
+    lp = jax.tree.map(lambda a: a[0], params["layers"])  # first layer
+    x = 0.1 * jax.random.normal(jax.random.PRNGKey(1), (2, 64, cfg.d_model),
+                                jnp.bfloat16)
+    out, aux = moe_block(lp["moe"], cfg, x)
+    assert out.shape == x.shape
+    assert np.isfinite(np.asarray(out, np.float32)).all()

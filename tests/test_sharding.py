@@ -1,0 +1,79 @@
+"""Sharding-rule unit tests (no multi-device mesh needed: specs are pure
+functions of shapes + axis sizes)."""
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.params import ParamDef, param_specs, resolve_spec
+from repro.models.transformer import model_defs
+
+AX = {"model": 16, "data": 16}
+
+
+def spec_of(d):
+    return resolve_spec(d, AX)
+
+
+def test_ff_sharded_on_model():
+    d = ParamDef((2048, 6144), ("embed", "ff"))
+    assert spec_of(d) == P(None, "model")
+
+
+def test_vocab_priority_over_embed():
+    d = ParamDef((131072, 5120), ("vocab", "embed"))
+    assert spec_of(d) == P("model", None)
+
+
+def test_nondivisible_vocab_falls_back_to_embed():
+    d = ParamDef((92553, 2048), ("vocab", "embed"))
+    assert spec_of(d) == P(None, "model")
+
+
+def test_kv_heads_replicated_when_non_divisible():
+    cfg = get_config("mistral-nemo-12b")  # kv=8 < 16
+    from repro.models.layers import attention_defs
+    specs = {k: resolve_spec(v, AX) for k, v in attention_defs(cfg).items()}
+    assert specs["wk"] == P(None, None, None)       # replicated
+    assert specs["wq"] == P(None, "model", None)    # heads sharded
+
+
+def test_kv_heads_sharded_when_divisible():
+    cfg = get_config("zamba2-7b")  # kv=32
+    from repro.models.layers import attention_defs
+    specs = {k: resolve_spec(v, AX) for k, v in attention_defs(cfg).items()}
+    assert specs["wk"] == P(None, "model", None)
+
+
+def test_experts_sharded_when_divisible():
+    cfg = get_config("moonshot-v1-16b-a3b")  # 64 experts
+    d = ParamDef((64, 2048, 1408), ("experts", "embed", "ff"))
+    assert spec_of(d) == P("model", None, None)
+
+
+def test_experts_fall_to_ff_when_non_divisible():
+    d = ParamDef((8, 4096, 14336), ("experts", "embed", "ff"))  # mixtral
+    assert spec_of(d) == P(None, None, "model")
+
+
+def test_fsdp_shards_largest_remaining_dim():
+    d = ParamDef((8, 4096, 14336), ("experts", "embed", "ff"))
+    s = resolve_spec(d, AX, fsdp_axes=("data",))
+    assert s == P(None, "data", "model")
+
+
+def test_layer_stacked_dim_never_sharded():
+    cfg = get_config("qwen3-1.7b")
+    specs = param_specs(model_defs(cfg), AX)
+    for leaf in jax.tree.leaves(specs["layers"],
+                                is_leaf=lambda x: isinstance(x, P)):
+        assert len(leaf) == 0 or leaf[0] is None
+
+
+def test_all_full_configs_have_some_model_sharding():
+    from repro.configs import ARCH_IDS
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        specs = param_specs(model_defs(cfg), AX)
+        leaves = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+        assert any("model" in tuple(s) for s in leaves), arch

@@ -1,0 +1,111 @@
+"""Exact-semantics simulator vs the paper's own claims:
+
+  * every relaxation's measured elastic constant B_hat respects the Table-1
+    bound computed from the same (M, sigma, p, f, tau, gamma),
+  * convergence holds under every relaxation (Theorems 2/4 empirically),
+  * the adversarial oracle slows down linearly in B^2 (Lemma 6 direction).
+"""
+import numpy as np
+import pytest
+
+from repro.core import compression as C, theory
+from repro.core.problems import MLPClassification, Quadratic
+from repro.core.sim import Relaxation, simulate, simulate_shared_memory
+
+P, T, ALPHA = 8, 500, 0.02
+DIM = 32
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return Quadratic(dim=DIM, cond=8.0, sigma=1.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return np.ones(DIM, np.float32) * 2.0
+
+
+def _m2(prob, x0):
+    r2 = float(np.sum((x0 - np.asarray(prob.x_star)) ** 2)) * 1.5
+    return prob.m2_estimate(r2)
+
+
+CASES = [
+    ("crash", dict(f=3), lambda p, m2, s2: theory.b_crash_m(P, 3, m2)),
+    ("crash_subst", dict(f=3),
+     lambda p, m2, s2: theory.b_crash_variance(P, 3, s2)),
+    ("omission", dict(f=6, drop_prob=0.2),
+     lambda p, m2, s2: theory.b_crash_m(P, 6, m2)),
+    ("async", dict(tau_max=2),
+     lambda p, m2, s2: theory.b_async_mp(P, 2, m2)),
+    ("elastic_variance", dict(drop_prob=0.3),
+     lambda p, m2, s2: theory.b_elastic_scheduler_variance(s2)),
+]
+
+
+@pytest.mark.parametrize("kind,kw,bound", CASES,
+                         ids=[c[0] for c in CASES])
+def test_b_hat_within_table1_bound(prob, x0, kind, kw, bound):
+    res = simulate(prob, Relaxation(kind, **kw), P, ALPHA, T, seed=3, x0=x0)
+    b_theory = bound(prob, _m2(prob, x0), prob.sigma2)
+    assert res.b_hat <= b_theory * 1.05, (kind, res.b_hat, b_theory)
+    # and convergence was not destroyed
+    assert res.losses[-1] < 0.05 * res.losses[0]
+
+
+@pytest.mark.parametrize("comp,gamma_fn", [
+    (C.topk_compressor(0.25), lambda n: C.topk_gamma(n, n // 4)),
+    (C.onebit_compressor(), C.onebit_gamma),
+], ids=["topk", "onebit"])
+def test_ef_compression_bound(prob, x0, comp, gamma_fn):
+    res = simulate(prob, Relaxation("ef_comp", compressor=comp),
+                   P, ALPHA, T, seed=3, x0=x0)
+    b = theory.b_ef_compression(gamma_fn(DIM), _m2(prob, x0))
+    assert res.b_hat <= b * 1.05
+    assert res.losses[-1] < 0.05 * res.losses[0]
+
+
+def test_shared_memory_bound(prob, x0):
+    res = simulate_shared_memory(prob, P, 0.005, T, tau_max=3, seed=3, x0=x0)
+    b = theory.b_shared_memory(DIM, 3, _m2(prob, x0))
+    assert res.b_hat <= b
+    assert res.losses[-1] < 0.5 * res.losses[0]
+
+
+def test_strongly_convex_rate_vs_thm5(prob, x0):
+    """Measured E||x_T - x*||^2 under the paper's alpha must respect the
+    Theorem 5 RHS (sync case: B = 0)."""
+    import math
+    Tl = 800
+    alpha = 2 * (math.log(Tl) + math.log(P)) / (prob.c * Tl)
+    res = simulate(prob, Relaxation("sync"), P, alpha, Tl, seed=5, x0=x0)
+    pc = prob.constants(x0)
+    rhs = theory.thm5_rhs(pc, 0.0, Tl, P)
+    dist2 = float(np.sum((res.x_final - np.asarray(prob.x_star)) ** 2))
+    assert dist2 <= rhs, (dist2, rhs)
+
+
+def test_lemma6_slowdown_monotone_in_b(prob, x0):
+    """Adversarial oracle: larger B => worse final distance (Lemma 6)."""
+    finals = []
+    for b in (0.0, 20.0, 80.0):
+        res = simulate(prob, Relaxation("adversarial", B_adv=b), P, ALPHA,
+                       400, seed=7, x0=x0)
+        finals.append(float(np.sum(
+            (res.x_final - np.asarray(prob.x_star)) ** 2)))
+    assert finals[0] < finals[1] < finals[2], finals
+
+
+def test_nonconvex_convergence_under_relaxations():
+    """MLP: every relaxation reaches a small gradient norm (Theorem 2/3
+    qualitatively) and beats a no-training baseline on loss."""
+    mlp = MLPClassification(seed=0)
+    x0 = mlp.init(seed=1)
+    base = float(mlp.loss(x0))
+    for kind, kw in [("sync", {}), ("elastic_variance", dict(drop_prob=0.3)),
+                     ("async", dict(tau_max=2))]:
+        res = simulate(mlp, Relaxation(kind, **kw), 4, 0.1, 400, seed=2,
+                       x0=np.asarray(x0))
+        assert res.losses[-1] < 0.7 * base, (kind, res.losses[-1], base)
+        assert res.grad_norms2[-1] < res.grad_norms2[0]
