@@ -1,5 +1,10 @@
 """Figure 3 (right): variance-bounded elastic scheduler — accuracy per
-epoch vs the perfectly-consistent baseline (paper: run without momentum)."""
+epoch vs the perfectly-consistent baseline (paper: run without momentum).
+
+Each strategy is averaged over SEEDS vmapped runs (`simulate_sweep`
+compiles one scan program and maps it over the seed axis), so the
+recovered-accuracy check compares seed-mean accuracies, not single
+trajectories."""
 from __future__ import annotations
 
 import jax.numpy as jnp
@@ -7,9 +12,10 @@ import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.problems import MLPClassification
-from repro.core.sim import Relaxation, simulate
+from repro.core.sim import Relaxation, simulate_sweep
 
 P, T, ALPHA = 8, 800, 0.08
+SEEDS = (4, 5, 6, 7)
 
 
 def _accuracy(mlp, x):
@@ -27,13 +33,16 @@ def run():
     for name, relax in [("sync", Relaxation("sync")),
                         ("variance_bounded",
                          Relaxation("elastic_variance", drop_prob=0.3))]:
-        res, us = timed(lambda r=relax: simulate(mlp, r, P, ALPHA, T, seed=4,
-                                                 x0=x0), iters=1)
-        acc = _accuracy(mlp, res.x_final)
-        accs[name] = acc
-        rows.append(row(f"fig3_right/{name}", us,
-                        f"loss={res.losses[-1]:.4f};acc={acc:.3f};"
-                        f"B_hat={res.b_hat:.2f}"))
+        batch, us = timed(lambda r=relax: simulate_sweep(
+            mlp, r, P, ALPHA, T, SEEDS, x0=x0), iters=1)
+        acc_s = [_accuracy(mlp, res.x_final) for res in batch]
+        accs[name] = float(np.mean(acc_s))
+        rows.append(row(
+            f"fig3_right/{name}", us,
+            f"loss={np.mean([r.losses[-1] for r in batch]):.4f};"
+            f"acc={accs[name]:.3f}+-{np.std(acc_s):.3f};"
+            f"B_hat={np.mean([r.b_hat for r in batch]):.2f};"
+            f"seeds={len(SEEDS)}"))
     recovered = accs["variance_bounded"] >= accs["sync"] - 0.05
     rows.append(row("fig3_right/accuracy_recovered", 0.0,
                     "ok" if recovered else "VIOLATION"))

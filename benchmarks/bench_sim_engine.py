@@ -1,0 +1,101 @@
+"""Simulator engine micro-benchmark: ref (numpy loop) vs scan (lax.scan).
+
+Reports steps/s for both engines across a (p, d, kind) grid plus the
+scan/ref speedup, seeds/s for the vmapped multi-seed sweep, and one
+``accept/*`` summary row per headline kind (best p >= 16 speedup, with an
+ok/BELOW_10X marker) — the PR-over-PR perf tripwire for the tentpole claim.
+`run.py` persists every row into ``BENCH_sim.json`` so the trajectory is
+tracked across PRs.
+
+Two regimes on purpose: at d = 128 the quadratic's matvec is cheap and the
+grid measures pure engine overhead (the oracle pays ~1-2 ms/step in python
+loops, per-step jit dispatch and device syncs); at d = 256 the dense matvec
+starts to dominate *both* engines, so the ratio compresses toward the
+shared compute cost — that row tracks how close the scan engine runs to
+the problem's arithmetic floor.
+
+Timing is best-of-N (`timed(..., best=True)`), not mean — engine speedups,
+not machine load, are what this file tracks.  Set ``BENCH_SIM_SMOKE=1``
+for a seconds-scale CI smoke grid.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.problems import Quadratic
+from repro.core.sim import Relaxation, simulate, simulate_sweep
+
+SMOKE = bool(int(os.environ.get("BENCH_SIM_SMOKE", "0")))
+
+KINDS = [
+    ("sync", lambda: Relaxation("sync")),
+    ("async", lambda: Relaxation("async", tau_max=3)),
+    ("elastic_variance", lambda: Relaxation("elastic_variance",
+                                            drop_prob=0.3)),
+    ("elastic_norm", lambda: Relaxation("elastic_norm", beta=0.8)),
+    ("crash_subst", lambda: Relaxation("crash_subst", f=3)),
+]
+ACCEPT_KINDS = ("sync", "async", "elastic_variance")
+
+GRID = [(8, 64)] if SMOKE else [(8, 256), (16, 128), (16, 256), (32, 128),
+                                (32, 256)]
+T = 50 if SMOKE else 400
+SWEEP_SEEDS = 4 if SMOKE else 16
+
+
+def _steps_per_s(us: float) -> float:
+    return T / (us / 1e6)
+
+
+def run():
+    rows = []
+    probs = {}
+    best = {k: 0.0 for k in ACCEPT_KINDS}    # best p>=16 speedup per kind
+    for p, d in GRID:
+        if d not in probs:
+            probs[d] = Quadratic(dim=d, cond=8.0, sigma=1.0, seed=0)
+        prob = probs[d]
+        x0 = np.ones(d, np.float32)
+        for name, mk in KINDS:
+            relax = mk()
+            _, us_ref = timed(lambda: simulate(
+                prob, relax, p, 0.02, T, seed=3, x0=x0, engine="ref"),
+                warmup=1, iters=2, best=True)
+            _, us_scan = timed(lambda: simulate(
+                prob, relax, p, 0.02, T, seed=3, x0=x0, engine="scan"),
+                warmup=1, iters=3, best=True)
+            speed = us_ref / us_scan
+            if p >= 16 and name in ACCEPT_KINDS:
+                best[name] = max(best[name], speed)
+            tag = f"sim_engine/{name}_p{p}_d{d}"
+            rows.append(row(f"{tag}_ref", us_ref,
+                            f"steps_per_s={_steps_per_s(us_ref):.0f}"))
+            rows.append(row(
+                f"{tag}_scan", us_scan,
+                f"steps_per_s={_steps_per_s(us_scan):.0f};"
+                f"speedup_vs_ref={speed:.1f}x"))
+    # vmapped multi-seed sweep: one compiled program over stacked seeds
+    p, d = GRID[-1]
+    prob = probs[d]
+    x0 = np.ones(d, np.float32)
+    relax = Relaxation("async", tau_max=3)
+    seeds = list(range(SWEEP_SEEDS))
+    _, us_sweep = timed(lambda: simulate_sweep(
+        prob, relax, p, 0.02, T, seeds, x0=x0), warmup=1, iters=3, best=True)
+    _, us_one = timed(lambda: simulate(
+        prob, relax, p, 0.02, T, seed=0, x0=x0, engine="scan"),
+        warmup=1, iters=3, best=True)
+    rows.append(row(
+        f"sim_engine/sweep_async_p{p}_d{d}_x{SWEEP_SEEDS}", us_sweep,
+        f"seeds_per_s={SWEEP_SEEDS / (us_sweep / 1e6):.1f};"
+        f"vmap_efficiency={SWEEP_SEEDS * us_one / us_sweep:.1f}x"))
+    if not SMOKE:
+        for name in ACCEPT_KINDS:
+            rows.append(row(
+                f"accept/sim_engine_{name}_10x_p16", 0.0,
+                f"best_speedup={best[name]:.1f}x;"
+                + ("ok" if best[name] >= 10.0 else "BELOW_10X")))
+    return rows

@@ -5,13 +5,17 @@ from __future__ import annotations
 import time
 
 
-def timed(fn, *args, warmup: int = 1, iters: int = 3):
+def timed(fn, *args, warmup: int = 1, iters: int = 3, best: bool = False):
+    """Time fn; returns (out, us_per_call). ``best=True`` reports the
+    fastest iteration instead of the mean (robust on noisy machines)."""
     for _ in range(warmup):
         out = fn(*args)
-    t0 = time.perf_counter()
+    times = []
     for _ in range(iters):
+        t0 = time.perf_counter()
         out = fn(*args)
-    dt = (time.perf_counter() - t0) / iters
+        times.append(time.perf_counter() - t0)
+    dt = min(times) if best else sum(times) / iters
     return out, dt * 1e6  # us
 
 

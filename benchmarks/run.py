@@ -1,5 +1,12 @@
-"""Benchmark harness: one module per paper table/figure (+ roofline and
-kernel micro-benches). Prints ``name,us_per_call,derived`` CSV."""
+"""Benchmark harness: one module per paper table/figure (+ roofline, kernel
+and simulator-engine micro-benches). Prints ``name,us_per_call,derived`` CSV
+and mirrors the rows into a machine-readable ``BENCH_sim.json`` (override
+the path with ``BENCH_JSON``) so the perf trajectory is tracked across PRs.
+The JSON maps row name -> {us_per_call, derived}, plus one ``_module_rows``
+bookkeeping key so filtered re-runs can evict a module's stale rows.
+"""
+import json
+import os
 import sys
 import traceback
 
@@ -13,25 +20,56 @@ MODULES = [
     "benchmarks.bench_convergence_nonconvex",
     "benchmarks.bench_convergence_strongly_convex",
     "benchmarks.bench_lemma6_lower_bound",
+    "benchmarks.bench_sim_engine",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
 ]
+
+JSON_PATH = os.environ.get("BENCH_JSON", "BENCH_sim.json")
 
 
 def main() -> None:
     print("name,us_per_call,derived")
     failed = 0
+    results: dict = {}
+    module_rows: dict = {}           # module -> row names it produced
     only = sys.argv[1] if len(sys.argv) > 1 else ""
     for modname in MODULES:
         if only and only not in modname:
             continue
         try:
             mod = __import__(modname, fromlist=["run"])
-            print_rows(mod.run())
+            rows = mod.run()
+            print_rows(rows)
+            for name, us, derived in rows:
+                results[name] = {"us_per_call": us, "derived": derived}
+            module_rows[modname] = [r[0] for r in rows]
         except Exception:  # noqa: BLE001
             traceback.print_exc()
             print(f"{modname},0,FAILED")
+            results[modname] = {"us_per_call": 0, "derived": "FAILED"}
+            module_rows[modname] = [modname]
             failed += 1
+    if only and os.path.exists(JSON_PATH):
+        # filtered re-run: merge into the existing record instead of
+        # clobbering the other modules' perf trajectory — dropping every
+        # row a re-run module produced last time, so a module that now
+        # fails doesn't leave stale pre-regression numbers behind
+        with open(JSON_PATH) as fh:
+            merged = json.load(fh)
+        prev_rows = merged.pop("_module_rows", {})
+        stale = set(module_rows) | (set(prev_rows) - set(MODULES))
+        for modname in stale:             # re-run + renamed/deleted modules
+            for name in prev_rows.pop(modname, []):
+                merged.pop(name, None)
+            merged.pop(modname, None)     # old FAILED marker, if any
+        merged.update(results)
+        results = merged
+        module_rows = {**prev_rows, **module_rows}
+    results["_module_rows"] = module_rows
+    with open(JSON_PATH, "w") as fh:
+        json.dump(results, fh, indent=1, sort_keys=True)
+        fh.write("\n")
     if failed:
         raise SystemExit(1)
 

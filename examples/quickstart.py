@@ -44,6 +44,12 @@ def main():
           "\npaper's bound — that is Theorem 2/4 + Table 1 in action.\n")
 
     # --- 2. the production scheduler at smoke scale -------------------
+    import importlib.util
+    if importlib.util.find_spec("repro.dist") is None:
+        print("repro.dist is not available in this snapshot — skipping the "
+              "smoke-scale\ntraining run (see examples/elastic_training.py "
+              "for the full comparison).")
+        return
     print("Training a smoke-scale qwen3 with the elastic scheduler")
     print("(see examples/elastic_training.py for the full comparison):")
     import subprocess

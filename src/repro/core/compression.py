@@ -113,11 +113,18 @@ def qsgd_q(w: jax.Array, key: jax.Array, levels: int = 4) -> jax.Array:
 
 @dataclass(frozen=True)
 class Compressor:
-    """Dense-form compressor with its contraction constant."""
+    """Dense-form compressor with its contraction constant.
+
+    ``kind``/``ratio`` let batched callers (the scan simulator engine) route
+    the row-wise EF round through the fused Pallas kernels instead of the
+    dense ``q``; ``kind="custom"`` always takes the dense path.
+    """
 
     q: Callable[[jax.Array], jax.Array]
     gamma: Callable[[int], float]
     name: str
+    kind: str = "custom"          # topk | onebit | custom
+    ratio: float = 0.0            # topk only
 
 
 def topk_compressor(ratio: float) -> Compressor:
@@ -126,11 +133,11 @@ def topk_compressor(ratio: float) -> Compressor:
         return topk_q(w, k)
 
     return Compressor(q, lambda n: topk_gamma(n, max(1, int(round(n * ratio)))),
-                      f"topk{ratio}")
+                      f"topk{ratio}", kind="topk", ratio=ratio)
 
 
 def onebit_compressor() -> Compressor:
-    return Compressor(onebit_q, onebit_gamma, "onebit")
+    return Compressor(onebit_q, onebit_gamma, "onebit", kind="onebit")
 
 
 def ef_compress(comp: Compressor, update: jax.Array, err: jax.Array):
@@ -141,3 +148,29 @@ def ef_compress(comp: Compressor, update: jax.Array, err: jax.Array):
     w = err + update
     payload = comp.q(w)
     return payload, w - payload
+
+
+def ef_compress_rows(comp: Compressor, updates: jax.Array, errs: jax.Array,
+                     use_kernel: bool = True, interpret: bool = True):
+    """Batched error-feedback round: one row per worker.
+
+    updates/errs: (p, d) — each row is an independent Alg-6 round. For the
+    topk/onebit compressors the whole batch runs through the fused Pallas
+    EF kernels (interpret mode on CPU; row-local selection == per-worker
+    global selection since each worker is one row). Returns
+    (payloads (p, d), new_errs (p, d)) with payload = Q(w), w = err + upd.
+    """
+    w = errs + updates.astype(jnp.float32)
+    p, d = w.shape
+    if use_kernel and comp.kind == "topk":
+        from repro.kernels.topk_ef.ops import compress_leaf
+        _, _, new_errs = compress_leaf(updates.astype(jnp.float32), errs,
+                                       ratio=comp.ratio, interpret=interpret)
+        return w - new_errs, new_errs
+    if use_kernel and comp.kind == "onebit" and d % 8 == 0:
+        from repro.kernels.onebit_ef.ops import compress_leaf
+        _, _, new_errs = compress_leaf(updates.astype(jnp.float32), errs,
+                                       interpret=interpret)
+        return w - new_errs, new_errs
+    payloads = jax.vmap(comp.q)(w)
+    return payloads, w - payloads

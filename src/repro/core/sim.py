@@ -1,4 +1,4 @@
-"""Exact-semantics simulator for the paper's distributed models (Algs 1-6).
+"""Simulator for the paper's distributed models (Algs 1-6) — dispatch facade.
 
 p logical workers hold views ``v`` (p, d); the auxiliary/global parameter
 ``x`` (Def. 1) accumulates *every* generated gradient with weight alpha/p
@@ -8,277 +8,68 @@ the paper's appendix algorithms; the simulator measures the realized
 elastic-consistency gap  max_i ||x_t - v_t^i||^2 / alpha^2  every step, so
 Table 1's bounds can be checked against ground truth.
 
-Scheduling randomness is drawn from a dedicated ``np.random.default_rng``
-stream, independent of the gradient-sampling keys — the paper's *oblivious
-adversary* assumption, literally.
+Engine selection
+----------------
+Two engines share identical semantics and identical randomness:
+
+  engine="scan" (default) — `repro.core.sim_engine`: the whole T-step run is
+      one jitted ``jax.lax.scan`` program (delivery matrices, fixed-capacity
+      delay ring buffers, Pallas EF kernels); the host syncs once per run.
+      ``simulate_sweep`` vmaps it over seeds for multi-seed figure sweeps.
+  engine="ref" — `repro.core.sim_ref`: the numpy loop-per-worker oracle,
+      kept as the exact-semantics reference the parity suite checks the
+      scan engine against step-for-step.
+
+Oblivious-adversary RNG layout
+------------------------------
+Scheduling randomness is pre-drawn from a dedicated
+``np.random.default_rng(seed)`` stream into a dense
+:class:`~repro.core.sim_types.Schedule` (draw layout documented in
+`sim_types`); gradient sampling uses an independent
+``jax.random.PRNGKey(seed + 1)`` stream — one batched ``presample_grads``
+draw when the problem supports it (both built-in testbeds: their gradient
+stochasticity is iterate-independent), a per-step ``split`` chain otherwise.
+This is the paper's *oblivious adversary* assumption, literally: the
+scheduler's coin flips are fixed before any gradient is seen.  Both engines
+consume the same schedule and the same gradient draws, so a
+(kind, seed, p, T) tuple determines one trajectory regardless of engine.
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from typing import Optional
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import compression as C
-
-
-@dataclass(frozen=True)
-class Relaxation:
-    """Which consistency relaxation to simulate.
-
-    kind:
-      sync              — failure-free synchronous baseline (B = 0)
-      crash             — Alg 2: f crash faults, no substitution
-      crash_subst       — Alg 1: crash faults, receivers substitute own grad
-      omission          — Alg 3: <= f outstanding delayed messages
-      async             — B.4: per-message delay < tau_max
-      ef_comp           — Alg 6: error-feedback compression (all-delivered)
-      elastic_norm      — §5 norm-bounded scheduler (beta)
-      elastic_variance  — Alg 4: 1-step delays, substitute-then-correct
-      adversarial       — Lemma 6 oracle: view displaced by alpha*B
-    """
-
-    kind: str = "sync"
-    f: int = 0                   # crash/omission fault bound
-    tau_max: int = 1             # async delay bound
-    drop_prob: float = 0.3       # per-message delay probability
-    compressor: Optional[C.Compressor] = None
-    beta: float = 0.8            # norm-bounded scheduler threshold
-    B_adv: float = 0.0           # adversarial oracle displacement
-
-
-@dataclass
-class SimResult:
-    losses: np.ndarray           # recorded every `record_every`
-    grad_norms2: np.ndarray      # ||grad f(x_t)||^2 at the same cadence
-    gap2_over_alpha2: np.ndarray # max_i ||x_t - v_t^i||^2 / alpha^2, per step
-    x_final: np.ndarray
-    record_every: int
-    alpha: float
-
-    @property
-    def b_hat(self) -> float:
-        """Empirical elastic-consistency constant sqrt(max_t E gap^2/a^2)."""
-        return float(np.sqrt(np.max(self.gap2_over_alpha2)))
-
-    @property
-    def b_hat_mean(self) -> float:
-        return float(np.sqrt(np.mean(self.gap2_over_alpha2)))
+from repro.core import sim_engine, sim_ref
+from repro.core.sim_types import (Relaxation, Schedule, SimResult,  # noqa: F401
+                                  make_schedule, make_shared_memory_schedule)
+from repro.core.sim_engine import simulate_sweep  # noqa: F401  (re-export)
 
 
 def simulate(problem, relax: Relaxation, p: int, alpha: float, T: int,
-             seed: int = 0, x0=None, record_every: int = 10) -> SimResult:
+             seed: int = 0, x0=None, record_every: int = 10,
+             engine: str = "scan") -> SimResult:
     """Run T parallel iterations of Eq. (11) under ``relax``."""
-    rng = np.random.default_rng(seed)             # oblivious adversary
-    key = jax.random.PRNGKey(seed + 1)            # gradient sampling
-    d = problem.dim
-    if x0 is None:
-        x0 = np.zeros(d, np.float32)
-    x = np.array(x0, np.float32)                  # auxiliary parameter
-    v = np.tile(x0, (p, 1)).astype(np.float32)    # per-worker views
-    alive = np.ones(p, bool)
-
-    # --- relaxation state ---
-    crash_at = None
-    if relax.kind.startswith("crash"):
-        crashed_ids = rng.choice(p, size=relax.f, replace=False)
-        crash_at = {int(i): int(rng.integers(1, max(T - 1, 2)))
-                    for i in crashed_ids}
-    pending: list = []     # list of (deliver_t, i_dst, vec) for delayed msgs
-    err = np.zeros((p, d), np.float32)    # EF memories (Alg 6)
-    adv_dir = rng.normal(size=d).astype(np.float32)
-    adv_dir /= np.linalg.norm(adv_dir)
-
-    losses, gnorms, gaps = [], [], []
-
-    for t in range(T):
-        key, sub = jax.random.split(key)
-        g = np.asarray(problem.batch_grads(jnp.asarray(v), sub))  # (p, d)
-
-        if relax.kind == "adversarial":
-            # Lemma 6 oracle: gradient evaluated at a point alpha*B away
-            views_adv = x[None] + alpha * relax.B_adv * adv_dir[None]
-            key, sub = jax.random.split(key)
-            g = np.asarray(problem.batch_grads(
-                jnp.broadcast_to(jnp.asarray(views_adv), (p, d)), sub))
-
-        scale = alpha / p
-        if relax.kind in ("sync", "adversarial"):
-            upd = g[alive].sum(0) * scale
-            x -= upd
-            if relax.kind == "sync":
-                v[alive] -= upd
-            else:
-                v[alive] = x[None]  # oracle controls the view directly
-
-        elif relax.kind in ("crash", "crash_subst"):
-            # delivery matrix: recv[i, j] — does i receive j's gradient?
-            recv = np.ones((p, p), bool)
-            recv[:, ~alive] = False
-            recv[~alive, :] = False
-            for j, tc in crash_at.items():
-                if t == tc and alive[j]:
-                    # j computes+broadcasts, but only a random subset hears it
-                    subset = rng.random(p) < 0.5
-                    subset[j] = False
-                    recv[:, j] = subset & alive
-                    alive[j] = False
-            in_i_t = recv.any(0)                      # sent to >= 1 node
-            x -= scale * g[in_i_t].sum(0)
-            for i in np.nonzero(alive)[0]:
-                got = g[recv[i]].sum(0)
-                if relax.kind == "crash_subst":
-                    # Alg 1: substitute own grad for peers that crashed this
-                    # step and weren't heard (they were alive last step)
-                    missed = (~recv[i]) & in_i_t
-                    got = got + g[i] * missed.sum()
-                v[i] -= scale * got
-
-        elif relax.kind == "omission":
-            recv = np.ones((p, p), bool)
-            n_out = len(pending)
-            for i in range(p):
-                for j in range(p):
-                    if i != j and n_out < relax.f and \
-                            rng.random() < relax.drop_prob:
-                        recv[i, j] = False
-                        pending.append([t + 1 + int(rng.integers(0, 2)),
-                                        i, scale * g[j]])
-                        n_out += 1
-            x -= scale * g.sum(0)
-            for i in range(p):
-                v[i] -= scale * g[recv[i]].sum(0)
-            still = []
-            for dt, i, vec in pending:
-                if dt <= t:
-                    v[i] -= vec
-                else:
-                    still.append([dt, i, vec])
-            pending = still
-
-        elif relax.kind == "async":
-            x -= scale * g.sum(0)
-            for i in range(p):
-                for j in range(p):
-                    delay = 0 if i == j else int(
-                        rng.integers(0, relax.tau_max))
-                    if delay == 0:
-                        v[i] -= scale * g[j]
-                    else:
-                        pending.append([t + delay, i, scale * g[j]])
-            still = []
-            for dt, i, vec in pending:
-                if dt <= t:
-                    v[i] -= vec
-                else:
-                    still.append([dt, i, vec])
-            pending = still
-
-        elif relax.kind == "ef_comp":
-            comp = relax.compressor
-            payloads = np.zeros_like(g)
-            for i in range(p):
-                pay, e = C.ef_compress(comp, jnp.asarray(alpha * g[i]),
-                                       jnp.asarray(err[i]))
-                payloads[i] = np.asarray(pay)
-                err[i] = np.asarray(e)
-            x -= scale * g.sum(0)
-            v -= payloads.sum(0)[None] / p
-
-        elif relax.kind == "elastic_norm":
-            # §5: proceed once received norm >= beta * ||own grad||;
-            # leftovers apply next step (speculation depth 1).
-            x -= scale * g.sum(0)
-            norms = np.linalg.norm(g, axis=1)
-            for i in range(p):
-                order = rng.permutation(p)
-                got, acc = [i], norms[i] * 0.0
-                target = relax.beta * norms[i]
-                for j in order:
-                    if j == i:
-                        continue
-                    if acc >= target:
-                        pending.append([t + 1, i, scale * g[j]])
-                    else:
-                        got.append(j)
-                        acc += norms[j]
-                v[i] -= scale * g[got].sum(0)
-            still = []
-            for dt, i, vec in pending:
-                if dt <= t:
-                    v[i] -= vec
-                else:
-                    still.append([dt, i, vec])
-            pending = still
-
-        elif relax.kind == "elastic_variance":
-            # Alg 4: delayed peers' gradients replaced by own, corrected at
-            # the next iteration once the real gradient arrives.
-            x -= scale * g.sum(0)
-            for i in range(p):
-                upd = g[i].copy()  # own gradient always available
-                for j in range(p):
-                    if j == i:
-                        continue
-                    if rng.random() < relax.drop_prob:
-                        upd += g[i]                       # substitute
-                        pending.append([t + 1, i, scale * (g[j] - g[i])])
-                    else:
-                        upd += g[j]
-                v[i] -= scale * upd
-            still = []
-            for dt, i, vec in pending:
-                if dt <= t:
-                    v[i] -= vec                            # correction
-                else:
-                    still.append([dt, i, vec])
-            pending = still
-
-        else:
-            raise ValueError(relax.kind)
-
-        gap2 = float(np.max(np.sum((x[None] - v[alive]) ** 2, axis=1)))
-        gaps.append(gap2 / alpha ** 2)
-        if t % record_every == 0:
-            losses.append(float(problem.loss(jnp.asarray(x))))
-            gnorms.append(float(np.sum(np.asarray(
-                problem.grad(jnp.asarray(x))) ** 2)))
-
-    return SimResult(np.asarray(losses), np.asarray(gnorms),
-                     np.asarray(gaps), x, record_every, alpha)
+    if engine == "scan":
+        return sim_engine.simulate_scan(problem, relax, p, alpha, T,
+                                        seed=seed, x0=x0,
+                                        record_every=record_every)
+    if engine == "ref":
+        return sim_ref.simulate_ref(problem, relax, p, alpha, T, seed=seed,
+                                    x0=x0, record_every=record_every)
+    raise ValueError(f"unknown engine {engine!r} (want 'scan' or 'ref')")
 
 
 def simulate_shared_memory(problem, p: int, alpha: float, T: int,
                            tau_max: int, seed: int = 0, x0=None,
-                           record_every: int = 10) -> SimResult:
+                           record_every: int = 10,
+                           engine: str = "scan") -> SimResult:
     """Asynchronous shared-memory model (§4.2, Alg 5): single-step updates
     (Eq. 10); each iteration's gradient is computed on a componentwise-stale
     snapshot v[c] = x_{t - tau_c}[c], tau_c < tau_max (interval contention).
     """
-    rng = np.random.default_rng(seed)
-    key = jax.random.PRNGKey(seed + 1)
-    d = problem.dim
-    if x0 is None:
-        x0 = np.zeros(d, np.float32)
-    x = np.array(x0, np.float32)
-    hist = np.tile(x0, (tau_max + 1, 1)).astype(np.float32)  # ring buffer
-
-    losses, gnorms, gaps = [], [], []
-    for t in range(T):
-        taus = rng.integers(0, tau_max, size=d)
-        idx = (t - taus) % (tau_max + 1)
-        view = hist[idx, np.arange(d)]
-        key, sub = jax.random.split(key)
-        g = np.asarray(problem.batch_grads(jnp.asarray(view[None]), sub))[0]
-        gaps.append(float(np.sum((x - view) ** 2)) / alpha ** 2)
-        x = x - alpha * g
-        hist[(t + 1) % (tau_max + 1)] = x
-        if t % record_every == 0:
-            losses.append(float(problem.loss(jnp.asarray(x))))
-            gnorms.append(float(np.sum(np.asarray(
-                problem.grad(jnp.asarray(x))) ** 2)))
-
-    return SimResult(np.asarray(losses), np.asarray(gnorms),
-                     np.asarray(gaps), x, record_every, alpha)
+    if engine == "scan":
+        return sim_engine.simulate_shared_memory_scan(
+            problem, p, alpha, T, tau_max, seed=seed, x0=x0,
+            record_every=record_every)
+    if engine == "ref":
+        return sim_ref.simulate_shared_memory_ref(
+            problem, p, alpha, T, tau_max, seed=seed, x0=x0,
+            record_every=record_every)
+    raise ValueError(f"unknown engine {engine!r} (want 'scan' or 'ref')")

@@ -1,0 +1,386 @@
+"""Device-resident ``lax.scan`` engine for the elastic-consistency simulator.
+
+One pure, fully-jitted step function per relaxation kind; the whole T-step
+run compiles to a single XLA program, so the host syncs **once per run**
+instead of once per step (the numpy oracle in `sim_ref` pays a device
+round-trip + ``float()`` sync every step).  Structural translation from the
+oracle:
+
+  * the per-worker Python loops become (p, p) boolean delivery matrices
+    contracted against the (p, d) gradient stack on the MXU,
+  * the dynamic ``pending`` list becomes fixed-capacity delay ring buffers —
+    capacity is bounded by the relaxation itself (``tau_max`` for async,
+    delay <= 2 for omission, 1 step for the elastic schedulers),
+  * EF compression routes through the fused Pallas ``topk_ef``/``onebit_ef``
+    kernels (interpret mode off-TPU) via ``compression.ef_compress_rows``
+    instead of a per-worker dense loop,
+  * gradient randomness is materialized in ONE batched ``presample_grads``
+    draw before the scan (T sequential in-loop threefry calls are the
+    dominant per-step cost on CPU) and enters as scan ``xs``; problems
+    without ``presample_grads`` fall back to a per-step key-split chain,
+  * losses/grad-norms are evaluated *after* the scan on the recorded
+    trajectory in one vmapped call.
+
+Scheduling randomness is the pre-drawn oblivious-adversary
+:class:`~repro.core.sim_types.Schedule` (layout in `sim_types`); per-step
+draws enter the scan as ``xs`` slices, so the engine consumes bit-identical
+schedules to `sim_ref` — the parity suite checks trajectories step-for-step.
+
+Compiled programs are cached on the problem object keyed by
+(relaxation, p, T); ``alpha``, ``x0`` and the schedule are traced arguments,
+so figure sweeps over step sizes or seeds never recompile.
+:func:`simulate_sweep` vmaps one compiled program over stacked seeds for the
+multi-seed figure sweeps.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import compression as C
+from repro.core.sim_types import (Relaxation, Schedule, SimResult,
+                                  make_schedule, make_shared_memory_schedule)
+
+def _interpret() -> bool:
+    """Pallas kernels run compiled on TPU, interpreted elsewhere (CPU CI).
+
+    Evaluated lazily (at trace time, never at import): ``default_backend()``
+    initializes the XLA backend, and launch scripts (`repro.launch.dryrun`)
+    must be able to set XLA_FLAGS before that first initialization.
+    """
+    return jax.default_backend() != "tpu"
+
+
+_CACHE_ATTR = "_sim_engine_cache"
+
+
+def _cache(problem) -> dict:
+    cache = getattr(problem, _CACHE_ATTR, None)
+    if cache is None:
+        cache = {}
+        setattr(problem, _CACHE_ATTR, cache)
+    return cache
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+def _build_run(problem, relax: Relaxation, p: int, T: int):
+    """Return run(x0, alpha, key, per_step, per_run) -> (xs, gaps/alpha^2).
+
+    ``xs`` is the (T, d) trajectory of the auxiliary parameter x (post-step),
+    recorded as scan outputs; the caller subsamples it for loss eval.
+    """
+    kind = relax.kind
+    d = problem.dim
+    eye = jnp.asarray(np.eye(p, dtype=bool))
+    # fast path: iterate-independent gradient randomness is drawn in ONE
+    # batched PRNG call before the scan (T sequential in-loop threefry calls
+    # dominate the step cost on CPU otherwise) and enters as scan xs
+    has_pre = hasattr(problem, "presample_grads")
+
+    # fixed ring capacities, bounded by the relaxation semantics
+    om_ring = 3                            # omission: delivery in {t+1, t+2}
+    as_ring = max(relax.tau_max, 1)        # async: delay < tau_max
+
+    def fmat(m):                           # bool (p,p) -> f32 for the MXU
+        return m.astype(jnp.float32)
+
+    def step(carry, xs):
+        if has_pre:
+            t, step_s, draw = xs
+            grads_at = lambda views: problem.batch_grads_at(views, draw)
+        else:
+            t, step_s = xs
+            carry["key"], sub = jax.random.split(carry["key"])
+            grads_at = lambda views: problem.batch_grads(views, sub)
+        x, v, alive = carry["x"], carry["v"], carry["alive"]
+        scale = carry["alpha"] / p
+
+        if kind == "adversarial":
+            views = x[None] + carry["alpha"] * relax.B_adv * \
+                carry["adv_dir"][None]
+            g = grads_at(jnp.broadcast_to(views, (p, d)))
+            x = x - scale * jnp.sum(g, 0)
+            v = jnp.broadcast_to(x[None], (p, d))
+
+        elif kind == "sync":
+            g = grads_at(v)
+            upd = scale * jnp.sum(g, 0)
+            x = x - upd
+            v = v - upd[None]
+
+        elif kind in ("crash", "crash_subst"):
+            g = grads_at(v)
+            crashing = alive & (carry["crash_step"] == t)
+            new_alive = alive & ~crashing
+            # recv[i, j]: does i receive j's broadcast this step?
+            base = alive[:, None] & alive[None, :]
+            heard = (carry["hear_u"].T < 0.5) & new_alive[:, None] & ~eye
+            recv = jnp.where(crashing[None, :], heard, base)
+            in_recv = jnp.any(recv, axis=0)           # heard by >= 1 node
+            x = x - scale * (fmat(in_recv) @ g)
+            got = fmat(recv) @ g
+            if kind == "crash_subst":
+                missed = jnp.sum((~recv) & in_recv[None, :], axis=1)
+                got = got + missed.astype(jnp.float32)[:, None] * g
+            v = jnp.where(new_alive[:, None], v - scale * got, v)
+            alive = new_alive
+
+        elif kind == "omission":
+            g = grads_at(v)
+            ring, cnt = carry["ring"], carry["cnt"]
+            cand = (step_s["drop_u"] < relax.drop_prob) & ~eye
+            # first-come quota: at most f messages outstanding, row-major
+            # (i, j) order — identical to the oracle's loop order
+            cf = cand.reshape(-1)
+            before = jnp.cumsum(cf) - cf
+            take = (cf & (before < relax.f - jnp.sum(cnt))).reshape(p, p)
+            gsum = jnp.sum(g, 0)
+            x = x - scale * gsum
+            v = v - scale * (gsum[None] - fmat(take) @ g)
+            for e in (0, 1):                          # extra delay in {0, 1}
+                m = take & (step_s["extra_delay"] == e)
+                slot = (t + 1 + e) % om_ring
+                ring = ring.at[slot].add(scale * (fmat(m) @ g))
+                cnt = cnt.at[slot].add(jnp.sum(m))
+            v = v - ring[t % om_ring]
+            carry["ring"] = ring.at[t % om_ring].set(0.0)
+            carry["cnt"] = cnt.at[t % om_ring].set(0)
+
+        elif kind == "async":
+            g = grads_at(v)
+            delays = step_s["delays"]
+            x = x - scale * jnp.sum(g, 0)
+            v = v - scale * (fmat(delays == 0) @ g)
+            if as_ring > 1:
+                ring = carry["ring"]
+                for dl in range(1, relax.tau_max):
+                    m = delays == dl
+                    ring = ring.at[(t + dl) % as_ring].add(
+                        scale * (fmat(m) @ g))
+                v = v - ring[t % as_ring]
+                carry["ring"] = ring.at[t % as_ring].set(0.0)
+
+        elif kind == "ef_comp":
+            g = grads_at(v)
+            payloads, carry["err"] = C.ef_compress_rows(
+                relax.compressor, carry["alpha"] * g, carry["err"],
+                interpret=_interpret())
+            x = x - scale * jnp.sum(g, 0)
+            v = v - jnp.sum(payloads, 0)[None] / p
+
+        elif kind == "elastic_norm":
+            g = grads_at(v)
+            perm = step_s["perm"]                     # (p, p) arrival order
+            norms = jnp.sqrt(jnp.sum(g * g, axis=1))
+            self_m = perm == jnp.arange(p)[:, None]
+            contrib = jnp.where(self_m, 0.0, norms[perm])
+            acc_before = jnp.cumsum(contrib, axis=1) - contrib
+            inc = (acc_before < relax.beta * norms[:, None]) | self_m
+            recv = jnp.zeros((p, p), bool).at[
+                jnp.arange(p)[:, None], perm].set(inc)
+            gsum = jnp.sum(g, 0)
+            recvg = fmat(recv) @ g
+            x = x - scale * gsum
+            v = v - scale * recvg - carry["defer"]
+            carry["defer"] = scale * (gsum[None] - recvg)
+
+        elif kind == "elastic_variance":
+            g = grads_at(v)
+            drop = (step_s["drop_u"] < relax.drop_prob) & ~eye
+            nd = jnp.sum(drop, axis=1).astype(jnp.float32)[:, None]
+            gsum = jnp.sum(g, 0)
+            dropg = fmat(drop) @ g
+            # keep@g = gsum - g - drop@g, so upd = gsum + nd*g - drop@g
+            x = x - scale * gsum
+            v = v - scale * (gsum[None] + nd * g - dropg) - carry["defer"]
+            carry["defer"] = scale * (dropg - nd * g)
+
+        else:
+            raise ValueError(kind)
+
+        carry["x"], carry["v"], carry["alive"] = x, v, alive
+        sq = jnp.sum((x[None] - v) ** 2, axis=1)
+        gap2 = jnp.max(jnp.where(alive, sq, -jnp.inf))
+        return carry, (x, gap2)
+
+    def run(x0, alpha, key, per_step, per_run):
+        x0 = x0.astype(jnp.float32)
+        carry = {"x": x0, "v": jnp.tile(x0, (p, 1)),
+                 "alive": jnp.ones(p, bool), "alpha": alpha}
+        xs_in = (jnp.arange(T), per_step)
+        if has_pre:
+            xs_in = xs_in + (problem.presample_grads(key, T, p),)
+        else:
+            carry["key"] = key
+        if kind.startswith("crash"):
+            carry["crash_step"] = per_run["crash_step"]
+            carry["hear_u"] = per_run["hear_u"]
+        if kind == "adversarial":
+            carry["adv_dir"] = per_run["adv_dir"]
+        if kind == "omission":
+            carry["ring"] = jnp.zeros((om_ring, p, d), jnp.float32)
+            carry["cnt"] = jnp.zeros(om_ring, jnp.int32)
+        if kind == "async" and as_ring > 1:
+            carry["ring"] = jnp.zeros((as_ring, p, d), jnp.float32)
+        if kind == "ef_comp":
+            carry["err"] = jnp.zeros((p, d), jnp.float32)
+        if kind in ("elastic_norm", "elastic_variance"):
+            carry["defer"] = jnp.zeros((p, d), jnp.float32)
+        _, (xs, gaps2) = jax.lax.scan(step, carry, xs_in)
+        return xs, gaps2 / (alpha * alpha)
+
+    return run
+
+
+def _build_shared_run(problem, p: int, T: int, tau_max: int):
+    d = problem.dim
+    has_pre = hasattr(problem, "presample_grads")
+
+    def step(carry, xs):
+        if has_pre:
+            t, taus, draw = xs
+            grads_at = lambda views: problem.batch_grads_at(views, draw)
+        else:
+            t, taus = xs
+            carry["key"], sub = jax.random.split(carry["key"])
+            grads_at = lambda views: problem.batch_grads(views, sub)
+        x, hist, alpha = carry["x"], carry["hist"], carry["alpha"]
+        idx = (t - taus) % (tau_max + 1)
+        view = hist[idx, jnp.arange(d)]
+        g = grads_at(view[None])[0]
+        gap2 = jnp.sum((x - view) ** 2)
+        x = x - alpha * g
+        carry["x"] = x
+        carry["hist"] = hist.at[(t + 1) % (tau_max + 1)].set(x)
+        return carry, (x, gap2)
+
+    def run(x0, alpha, key, per_step, per_run):
+        del per_run
+        x0 = x0.astype(jnp.float32)
+        carry = {"x": x0, "hist": jnp.tile(x0, (tau_max + 1, 1)),
+                 "alpha": alpha}
+        xs_in = (jnp.arange(T), per_step["taus"])
+        if has_pre:
+            xs_in = xs_in + (problem.presample_grads(key, T, 1),)
+        else:
+            carry["key"] = key
+        _, (xs, gaps2) = jax.lax.scan(step, carry, xs_in)
+        return xs, gaps2 / (alpha * alpha)
+
+    return run
+
+
+# ---------------------------------------------------------------------------
+# compiled-program cache + result assembly
+# ---------------------------------------------------------------------------
+
+def _get_run(problem, key_tup, builder, vmapped: bool):
+    cache = _cache(problem)
+    ck = ("vrun" if vmapped else "run",) + key_tup
+    if ck not in cache:
+        run = builder()
+        if vmapped:
+            run = jax.vmap(run, in_axes=(None, None, 0, 0, 0))
+        cache[ck] = jax.jit(run)
+    return cache[ck]
+
+
+def _get_eval(problem):
+    cache = _cache(problem)
+    if "eval" not in cache:
+        def ev(xs_rec):
+            losses = jax.vmap(problem.loss)(xs_rec)
+            gns = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(xs_rec)
+            return losses, gns
+        cache["eval"] = jax.jit(ev)
+    return cache["eval"]
+
+
+def _finalize(problem, xs, gaps2, alpha, record_every) -> SimResult:
+    xs_rec = xs[::record_every]
+    losses, gns = _get_eval(problem)(xs_rec)
+    return SimResult(np.asarray(losses), np.asarray(gns),
+                     np.asarray(gaps2, np.float64), np.asarray(xs[-1]),
+                     record_every, alpha)
+
+
+def _finalize_batch(problem, xs, gaps2, alpha, record_every) -> list:
+    """Sweep finalize: ONE loss/grad eval + bulk transfer for all seeds
+    (xs (S, T, d)), instead of S sequential dispatches and device syncs."""
+    n, t, d = xs.shape
+    xs_rec = xs[:, ::record_every]
+    n_rec = xs_rec.shape[1]
+    losses, gns = _get_eval(problem)(xs_rec.reshape(n * n_rec, d))
+    losses = np.asarray(losses).reshape(n, n_rec)
+    gns = np.asarray(gns).reshape(n, n_rec)
+    gaps2 = np.asarray(gaps2, np.float64)
+    x_fin = np.asarray(xs[:, -1])
+    return [SimResult(losses[i], gns[i], gaps2[i], x_fin[i],
+                      record_every, alpha) for i in range(n)]
+
+
+def _as_device(schedule: Schedule):
+    to_j = lambda tree: jax.tree.map(jnp.asarray, tree)
+    return to_j(schedule.per_step), to_j(schedule.per_run)
+
+
+def simulate_scan(problem, relax: Relaxation, p: int, alpha: float, T: int,
+                  seed: int = 0, x0=None, record_every: int = 10,
+                  schedule: Optional[Schedule] = None) -> SimResult:
+    """Compiled equivalent of :func:`repro.core.sim_ref.simulate_ref`."""
+    if schedule is None:
+        schedule = make_schedule(relax, p, problem.dim, T, seed)
+    if x0 is None:
+        x0 = np.zeros(problem.dim, np.float32)
+    run = _get_run(problem, (relax, p, T),
+                   lambda: _build_run(problem, relax, p, T), vmapped=False)
+    per_step, per_run = _as_device(schedule)
+    xs, gaps2 = run(jnp.asarray(x0, jnp.float32), jnp.float32(alpha),
+                    jax.random.PRNGKey(seed + 1), per_step, per_run)
+    return _finalize(problem, xs, gaps2, alpha, record_every)
+
+
+def simulate_sweep(problem, relax: Relaxation, p: int, alpha: float, T: int,
+                   seeds, x0=None, record_every: int = 10) -> list:
+    """vmap one compiled run over seeds: schedules and gradient keys get a
+    leading seed axis; x0/alpha are broadcast. Returns [SimResult] per seed.
+    """
+    seeds = list(seeds)
+    scheds = [make_schedule(relax, p, problem.dim, T, s) for s in seeds]
+    per_step = jax.tree.map(lambda *a: jnp.asarray(np.stack(a)),
+                            *[s.per_step for s in scheds])
+    per_run = jax.tree.map(lambda *a: jnp.asarray(np.stack(a)),
+                           *[s.per_run for s in scheds])
+    keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
+    if x0 is None:
+        x0 = np.zeros(problem.dim, np.float32)
+    vrun = _get_run(problem, (relax, p, T),
+                    lambda: _build_run(problem, relax, p, T), vmapped=True)
+    xs, gaps2 = vrun(jnp.asarray(x0, jnp.float32), jnp.float32(alpha),
+                     keys, per_step, per_run)
+    return _finalize_batch(problem, xs, gaps2, alpha, record_every)
+
+
+def simulate_shared_memory_scan(problem, p: int, alpha: float, T: int,
+                                tau_max: int, seed: int = 0, x0=None,
+                                record_every: int = 10,
+                                schedule: Optional[Schedule] = None
+                                ) -> SimResult:
+    if schedule is None:
+        schedule = make_shared_memory_schedule(p, problem.dim, T, tau_max,
+                                               seed)
+    if x0 is None:
+        x0 = np.zeros(problem.dim, np.float32)
+    run = _get_run(problem, ("shm", p, T, tau_max),
+                   lambda: _build_shared_run(problem, p, T, tau_max),
+                   vmapped=False)
+    per_step, per_run = _as_device(schedule)
+    xs, gaps2 = run(jnp.asarray(x0, jnp.float32), jnp.float32(alpha),
+                    jax.random.PRNGKey(seed + 1), per_step, per_run)
+    return _finalize(problem, xs, gaps2, alpha, record_every)

@@ -1,0 +1,19 @@
+"""Compat shim for the Pallas-TPU compiler-params API.
+
+jax renamed ``pltpu.TPUCompilerParams`` to ``pltpu.CompilerParams`` across
+the 0.4/0.5 series; every kernel routes through :func:`compiler_params` so
+the rename is absorbed in exactly one place.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+
+def compiler_params(**kwargs):
+    cls = getattr(pltpu, "CompilerParams", None) or getattr(
+        pltpu, "TPUCompilerParams", None)
+    if cls is None:
+        raise ImportError(
+            "jax.experimental.pallas.tpu exposes neither CompilerParams nor "
+            "TPUCompilerParams — unsupported jax version for these kernels")
+    return cls(**kwargs)

@@ -27,6 +27,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import compiler_params
+
 
 def _ssd_kernel(x_ref, a_ref, b_ref, c_ref, y_ref, s_out_ref, s_scr,
                 *, chunk: int):
@@ -92,7 +94,7 @@ def ssd_chunked_kernel(xh: jax.Array, a: jax.Array, bmat: jax.Array,
         ],
         scratch_shapes=[pltpu.VMEM((hd, n), jnp.float32)],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(xh, a, bmat, cmat)
     return y, state

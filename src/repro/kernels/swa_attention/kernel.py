@@ -21,6 +21,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.pltpu_compat import compiler_params
+
 NEG_INF = -1e30
 
 
@@ -97,6 +99,6 @@ def swa_decode_attention(q: jax.Array, k_cache: jax.Array,
             pltpu.VMEM((g, d), jnp.float32),
         ],
         interpret=interpret,
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
     )(pos_arr, q, k_cache, v_cache)

