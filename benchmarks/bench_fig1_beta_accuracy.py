@@ -8,6 +8,12 @@ The paper's correlation chain, measured in two panels on the non-convex MLP:
       Figure-1-left x-axis is covered — the 1-step scheduler alone only
       reaches small B on this testbed, where accuracy is flat, consistent
       with the paper's "full recovery for small beta" finding).
+
+Each panel is ONE ``simulate_grid`` call: beta / B_adv are traced knobs, so
+the whole sweep (all knob values x all seeds) shares a single compiled
+program instead of the per-value Python loop of sweeps this bench used to
+run.  Per-value rows carry the grid call's per-value time share; the
+``grid_total`` rows carry the whole-call wall time.
 """
 from __future__ import annotations
 
@@ -16,10 +22,12 @@ import numpy as np
 
 from benchmarks.common import row, timed
 from repro.core.problems import MLPClassification
-from repro.core.sim import Relaxation, simulate, simulate_sweep
+from repro.core.sim import Relaxation, simulate_grid
 
 P, T, ALPHA = 8, 600, 0.08
 SEEDS = (4, 5, 6)
+BETAS = (0.0, 0.2, 0.5, 0.8, 1.0)
+B_ADVS = (0.0, 5.0, 20.0, 60.0)
 
 
 def _accuracy(mlp, x):
@@ -33,27 +41,32 @@ def run():
     mlp = MLPClassification(seed=0)
     x0 = np.asarray(mlp.init(seed=1))
     rows = []
-    # (a) beta controls the measured bound (seed-mean via the vmapped sweep)
-    for beta in (0.0, 0.2, 0.5, 0.8, 1.0):
-        batch, us = timed(lambda b=beta: simulate_sweep(
-            mlp, Relaxation("elastic_norm", beta=b), P, ALPHA, T, SEEDS,
-            x0=x0), iters=1)
+    # (a) beta controls the measured bound (seed-mean, one compiled program)
+    relaxes = [Relaxation("elastic_norm", beta=b) for b in BETAS]
+    grid, us = timed(lambda: simulate_grid(
+        mlp, relaxes, P, ALPHA, T, seeds=SEEDS, x0=x0), iters=1)
+    rows.append(row("fig1_left/grid_betas", us,
+                    f"cases={len(BETAS) * len(SEEDS)};seeds={len(SEEDS)}"))
+    for ib, beta in enumerate(BETAS):
+        batch = grid.select(i_relax=ib)
         acc = float(np.mean([_accuracy(mlp, r.x_final) for r in batch]))
         rows.append(row(
-            f"fig1_left/beta_{beta}", us,
+            f"fig1_left/beta_{beta}", us / len(BETAS),
             f"B_hat={np.mean([r.b_hat for r in batch]):.2f};"
             f"loss={np.mean([r.losses[-1] for r in batch]):.4f};"
             f"acc={acc:.3f};seeds={len(SEEDS)}"))
-    # (b) the bound controls accuracy (Def.-1 oracle sweep)
+    # (b) the bound controls accuracy (Def.-1 oracle sweep, one program)
+    adv = [Relaxation("adversarial", B_adv=b) for b in B_ADVS]
+    agrid, us = timed(lambda: simulate_grid(
+        mlp, adv, P, ALPHA, T, seeds=(4,), x0=x0), iters=1)
+    rows.append(row("fig1_left/grid_bounds", us, f"cases={len(B_ADVS)}"))
     accs = {}
-    for b in (0.0, 5.0, 20.0, 60.0):
-        res, us = timed(lambda bb=b: simulate(
-            mlp, Relaxation("adversarial", B_adv=bb), P, ALPHA, T, seed=4,
-            x0=x0), iters=1)
+    for ib, b in enumerate(B_ADVS):
+        res = agrid[(0, ib, P, 0, 4)]
         acc = _accuracy(mlp, res.x_final)
         accs[b] = acc
         rows.append(row(
-            f"fig1_left/bound_B{b:g}", us,
+            f"fig1_left/bound_B{b:g}", us / len(B_ADVS),
             f"loss={res.losses[-1]:.4f};acc={acc:.3f}"))
     mono = accs[0.0] >= accs[20.0] >= accs[60.0]
     rows.append(row("fig1_left/accuracy_decreases_with_B", 0.0,

@@ -6,6 +6,10 @@ with wire bytes counted exactly per strategy (what each worker puts on the
 wire per step: dense all-reduce vs top-k payloads vs deferred buckets). The
 benchmark reports modelled time-to-target-loss, and the wire-byte savings —
 the quantity the paper's ~20-30% speedup comes from.
+
+All strategies run through ONE ``simulate_grid`` call (one compiled program
+per strategy group) instead of the per-strategy Python loop of `simulate`
+calls this bench used to run.
 """
 from __future__ import annotations
 
@@ -14,7 +18,7 @@ import numpy as np
 from benchmarks.common import row, timed
 from repro.core import compression as C
 from repro.core.problems import MLPClassification
-from repro.core.sim import Relaxation, simulate
+from repro.core.sim import Relaxation, simulate_grid
 
 P, T, ALPHA = 8, 800, 0.08
 LINK_BW = 50e9          # bytes/s per worker link (ICI-class)
@@ -59,16 +63,17 @@ def run():
          dict(strategy="elastic_variance")),
     ]
 
+    grid, us_grid = timed(lambda: simulate_grid(
+        mlp, [c[1] for c in cases], P, ALPHA, T, seeds=(4,), x0=x0),
+        iters=1)
     # common target from the exact run
-    res0, _ = timed(lambda: simulate(mlp, cases[0][1], P, ALPHA, T, seed=4,
-                                     x0=x0), iters=1)
-    target = res0.losses[0] * TARGET_FACTOR
+    target = grid[(0, 0, P, 0, 4)].losses[0] * TARGET_FACTOR
 
-    rows = []
+    rows = [row("fig1_right/grid_total", us_grid, f"cases={len(cases)}")]
     base_time = None
-    for name, relax, wire_kw in cases:
-        res, us = timed(lambda r=relax: simulate(mlp, r, P, ALPHA, T, seed=4,
-                                                 x0=x0), iters=1)
+    us = us_grid / len(cases)
+    for ic, (name, relax, wire_kw) in enumerate(cases):
+        res = grid[(0, ic, P, 0, 4)]
         hit = np.argmax(res.losses < target)
         steps = (int(hit) if res.losses[hit] < target else len(res.losses)) \
             * res.record_every

@@ -61,12 +61,15 @@ def run():
         x0 = np.ones(d, np.float32)
         for name, mk in KINDS:
             relax = mk()
+            # fused=False: this bench tracks the UNFUSED scan engine's
+            # trajectory across PRs; bench_sim_step_kernel owns the
+            # fused-vs-unfused comparison.
             _, us_ref = timed(lambda: simulate(
                 prob, relax, p, 0.02, T, seed=3, x0=x0, engine="ref"),
                 warmup=1, iters=2, best=True)
             _, us_scan = timed(lambda: simulate(
-                prob, relax, p, 0.02, T, seed=3, x0=x0, engine="scan"),
-                warmup=1, iters=3, best=True)
+                prob, relax, p, 0.02, T, seed=3, x0=x0, engine="scan",
+                fused=False), warmup=1, iters=3, best=True)
             speed = us_ref / us_scan
             if p >= 16 and name in ACCEPT_KINDS:
                 best[name] = max(best[name], speed)
@@ -84,9 +87,10 @@ def run():
     relax = Relaxation("async", tau_max=3)
     seeds = list(range(SWEEP_SEEDS))
     _, us_sweep = timed(lambda: simulate_sweep(
-        prob, relax, p, 0.02, T, seeds, x0=x0), warmup=1, iters=3, best=True)
+        prob, relax, p, 0.02, T, seeds, x0=x0, fused=False),
+        warmup=1, iters=3, best=True)
     _, us_one = timed(lambda: simulate(
-        prob, relax, p, 0.02, T, seed=0, x0=x0, engine="scan"),
+        prob, relax, p, 0.02, T, seed=0, x0=x0, engine="scan", fused=False),
         warmup=1, iters=3, best=True)
     rows.append(row(
         f"sim_engine/sweep_async_p{p}_d{d}_x{SWEEP_SEEDS}", us_sweep,

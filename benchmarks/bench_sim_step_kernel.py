@@ -1,0 +1,104 @@
+"""Fused simulator-step micro-benchmark: unfused scan step vs the fused
+`kernels/sim_step` fast path, plus the batched multi-(p, d) grid API vs
+the Python loop of per-case sweeps it replaces.
+
+The d >= 256 rows are the point: there both engines used to sit on a
+shared dense-matvec floor (ROADMAP item), and the fused step lifts it —
+the row-major gradient matmul, the single stacked delivery matmul and the
+precomputed delivery tensors cut both the FLOPs and the per-step op count.
+``accept/sim_step_fused_{kind}`` rows assert the >= 2x steps/s target on
+``sync`` and ``crash_subst`` (best over the d >= 256 grid, mirroring the
+engine bench's accept convention).  Set ``BENCH_SIM_SMOKE=1`` for a
+seconds-scale CI smoke grid.
+"""
+from __future__ import annotations
+
+import os
+
+import numpy as np
+
+from benchmarks.common import row, timed
+from repro.core.problems import Quadratic
+from repro.core.sim import Relaxation, simulate, simulate_grid, simulate_sweep
+
+SMOKE = bool(int(os.environ.get("BENCH_SIM_SMOKE", "0")))
+
+KINDS = [
+    ("sync", lambda: Relaxation("sync")),
+    ("crash_subst", lambda: Relaxation("crash_subst", f=3)),
+    ("elastic_variance", lambda: Relaxation("elastic_variance",
+                                            drop_prob=0.3)),
+]
+ACCEPT_KINDS = ("sync", "crash_subst")
+TARGET = 2.0
+
+GRID = [(8, 64)] if SMOKE else [(16, 256), (16, 512)]
+T = 50 if SMOKE else 400
+
+
+def _steps_per_s(us: float) -> float:
+    return T / (us / 1e6)
+
+
+def run():
+    rows = []
+    probs = {}
+    best = {k: 0.0 for k in ACCEPT_KINDS}
+    for p, d in GRID:
+        if d not in probs:
+            probs[d] = Quadratic(dim=d, cond=8.0, sigma=1.0, seed=0)
+        prob = probs[d]
+        x0 = np.ones(d, np.float32)
+        for name, mk in KINDS:
+            relax = mk()
+            _, us_unf = timed(lambda: simulate(
+                prob, relax, p, 0.02, T, seed=3, x0=x0, fused=False),
+                warmup=1, iters=3, best=True)
+            _, us_fus = timed(lambda: simulate(
+                prob, relax, p, 0.02, T, seed=3, x0=x0, fused=True),
+                warmup=1, iters=3, best=True)
+            speed = us_unf / us_fus
+            if d >= 256 and name in ACCEPT_KINDS:
+                best[name] = max(best[name], speed)
+            tag = f"sim_step/{name}_p{p}_d{d}"
+            rows.append(row(f"{tag}_unfused", us_unf,
+                            f"steps_per_s={_steps_per_s(us_unf):.0f}"))
+            rows.append(row(
+                f"{tag}_fused", us_fus,
+                f"steps_per_s={_steps_per_s(us_fus):.0f};"
+                f"speedup_vs_unfused={speed:.1f}x"))
+
+    # batched multi-(p, d) grid: stacked same-shape problem instances +
+    # alpha/seed cases in ONE compiled program vs the per-case Python loop
+    p, d = GRID[0]
+    n_prob, alphas, seeds = (2, [0.02], [0]) if SMOKE else \
+        (4, [0.01, 0.02], [0, 1])
+    gprobs = [Quadratic(dim=d, cond=8.0, sigma=1.0, seed=s)
+              for s in range(n_prob)]
+    x0 = np.ones(d, np.float32)
+    relax = Relaxation("crash_subst", f=3)
+    n_runs = n_prob * len(alphas) * len(seeds)
+
+    def looped():
+        return [simulate_sweep(pr, relax, p, a, T, seeds, x0=x0)
+                for pr in gprobs for a in alphas]
+
+    _, us_loop = timed(looped, warmup=1, iters=3, best=True)
+    _, us_grid = timed(lambda: simulate_grid(
+        gprobs, relax, p, alphas, T, seeds=seeds, x0=x0),
+        warmup=1, iters=3, best=True)
+    rows.append(row(
+        f"sim_step/grid_crash_subst_p{p}_d{d}_x{n_runs}", us_grid,
+        f"runs_per_s={n_runs / (us_grid / 1e6):.1f};"
+        f"speedup_vs_loop={us_loop / us_grid:.1f}x"))
+    rows.append(row(
+        f"sim_step/gridloop_crash_subst_p{p}_d{d}_x{n_runs}", us_loop,
+        f"runs_per_s={n_runs / (us_loop / 1e6):.1f}"))
+
+    if not SMOKE:
+        for name in ACCEPT_KINDS:
+            rows.append(row(
+                f"accept/sim_step_fused_{name}_2x_d256", 0.0,
+                f"best_speedup={best[name]:.1f}x;"
+                + ("ok" if best[name] >= TARGET else "BELOW_2X")))
+    return rows

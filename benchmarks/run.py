@@ -21,6 +21,7 @@ MODULES = [
     "benchmarks.bench_convergence_strongly_convex",
     "benchmarks.bench_lemma6_lower_bound",
     "benchmarks.bench_sim_engine",
+    "benchmarks.bench_sim_step_kernel",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
 ]

@@ -43,6 +43,34 @@ def main():
     print("\nEvery relaxation converges, and every measured B respects the"
           "\npaper's bound — that is Theorem 2/4 + Table 1 in action.\n")
 
+    # --- 1b. fused step + batched multi-(p, d) sweeps ------------------
+    # On the quadratic testbed the scan engine fuses the whole per-step
+    # pipeline (view gradients, delivery contraction, apply) into one
+    # kernel call (fused="auto" picks it at d >= 128, where the fusion
+    # beats the unfused scan step); simulate_grid
+    # stacks same-shape problem instances x scheduler knobs x step sizes
+    # x seeds into ONE compiled program instead of a loop of runs.
+    from repro.core.sim import simulate_grid
+    res_fused = simulate(prob, Relaxation("crash_subst", f=3), p, alpha, T,
+                         seed=3, x0=x0, fused=True)
+    print(f"fused crash_subst run: B_hat={res_fused.b_hat:.2f} "
+          f"(same trajectory as the unfused oracle, ~2x+ steps/s at "
+          f"d >= 256)")
+    # fused=True: at this demo's d=32 the "auto" policy would fall back to
+    # the (faster there) unfused per-problem programs; force the fused path
+    # so the stacked multi-problem batch axis is what actually runs.
+    grid = simulate_grid(
+        problems=[Quadratic(dim=32, cond=8.0, sigma=1.0, seed=s)
+                  for s in (0, 1)],
+        relaxations=[Relaxation("elastic_variance", drop_prob=q)
+                     for q in (0.1, 0.3)],
+        p_list=p, alphas=[0.01, alpha], T=200, seeds=(0, 1), x0=x0,
+        fused=True)
+    b_hats = [r.b_hat for r in grid.select(i_alpha=1)]
+    print(f"grid: {len(grid)} (problem x drop_prob x alpha x seed) runs in "
+          f"one program; B_hat range "
+          f"[{min(b_hats):.2f}, {max(b_hats):.2f}]\n")
+
     # --- 2. the production scheduler at smoke scale -------------------
     import importlib.util
     if importlib.util.find_spec("repro.dist") is None:

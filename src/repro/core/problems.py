@@ -70,12 +70,44 @@ class Quadratic:
 
     def presample_grads(self, key, T: int, p: int):
         """All gradient noise for a T-step, p-worker run in one draw."""
-        return jax.random.normal(key, (T, p, self.dim)) * (
-            self.sigma / np.sqrt(self.dim))
+        return self.presample_from_data(self.sim_data(), key, T, p)
 
     def batch_grads_at(self, views, draw):
         """Gradients at a (p, d) view stack given one step's noise (p, d)."""
         return jax.vmap(self.grad)(views) + draw
+
+    # -- data-parameterized variants (fused / batched multi-problem paths) --
+    # The simulator's fused step and `simulate_grid` trace one program and
+    # feed the problem *as data*, so same-shape instances stack on a leading
+    # batch axis (A (B, d, d), x_star (B, d)) and vmap across it.
+    # `presample_grads` delegates to `presample_from_data` so fused and
+    # unfused runs cannot drift apart in their noise draws; the parity
+    # suite holds both to the same trajectory.
+
+    def sim_data(self) -> dict:
+        """The problem as a traceable pytree."""
+        return {"A": self.A, "x_star": self.x_star,
+                "sigma": jnp.float32(self.sigma)}
+
+    def presample_from_data(self, data, key, T: int, p: int):
+        d = data["x_star"].shape[-1]
+        return jax.random.normal(key, (T, p, d)) * (
+            data["sigma"] / np.sqrt(d))
+
+    @staticmethod
+    def grads_from_data(data, views, draw):
+        """Row-major form of :meth:`batch_grads_at`: A is symmetric, so the
+        per-view gradient stack is one (p, d) @ (d, d) MXU matmul."""
+        return (views - data["x_star"][None, :]) @ data["A"] + draw
+
+    @staticmethod
+    def loss_from_data(data, x):
+        dlt = x - data["x_star"]
+        return 0.5 * dlt @ (data["A"] @ dlt)
+
+    @staticmethod
+    def grad_from_data(data, x):
+        return data["A"] @ (x - data["x_star"])
 
     @functools.cached_property
     def _jit_batch_grads_at(self):

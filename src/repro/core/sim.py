@@ -39,17 +39,26 @@ from __future__ import annotations
 from repro.core import sim_engine, sim_ref
 from repro.core.sim_types import (Relaxation, Schedule, SimResult,  # noqa: F401
                                   make_schedule, make_shared_memory_schedule)
-from repro.core.sim_engine import simulate_sweep  # noqa: F401  (re-export)
+from repro.core.sim_engine import (GridResult, simulate_grid,  # noqa: F401
+                                   simulate_sweep)
 
 
 def simulate(problem, relax: Relaxation, p: int, alpha: float, T: int,
              seed: int = 0, x0=None, record_every: int = 10,
-             engine: str = "scan") -> SimResult:
-    """Run T parallel iterations of Eq. (11) under ``relax``."""
+             engine: str = "scan", fused="auto") -> SimResult:
+    """Run T parallel iterations of Eq. (11) under ``relax``.
+
+    ``fused`` (scan engine only) selects the fused Pallas step fast path:
+    ``"auto"`` uses it when the (problem, relaxation) pair supports it AND
+    d is large enough for it to win (>= `sim_engine.AUTO_MIN_DIM`),
+    ``False`` forces the unfused oracle step, ``True`` errors if
+    unsupported.
+    """
     if engine == "scan":
         return sim_engine.simulate_scan(problem, relax, p, alpha, T,
                                         seed=seed, x0=x0,
-                                        record_every=record_every)
+                                        record_every=record_every,
+                                        fused=fused)
     if engine == "ref":
         return sim_ref.simulate_ref(problem, relax, p, alpha, T, seed=seed,
                                     x0=x0, record_every=record_every)

@@ -21,19 +21,37 @@ oracle:
   * losses/grad-norms are evaluated *after* the scan on the recorded
     trajectory in one vmapped call.
 
+Fused fast path (``fused=True|"auto"``)
+---------------------------------------
+For the `Quadratic` testbed and the kinds in
+:data:`repro.kernels.sim_step.FUSED_KINDS`, the per-step pipeline — view
+gradients ``(V - x*) @ A + noise``, the delivery contraction, and the
+averaging/apply update — collapses into one fused kernel call per step
+(`repro.kernels.sim_step`): delivery tensors are precomputed for the whole
+run in one vectorized pass (they are schedule-determined, never
+iterate-dependent), and ``sync`` further degenerates to a single matvec
+because every view equals ``x`` exactly.  Pallas kernel on TPU, the fused
+jnp oracle elsewhere.  The unfused scan step is kept verbatim as the
+parity oracle; ``fused="auto"`` (the default) switches the fast path on
+exactly when it is supported.
+
 Scheduling randomness is the pre-drawn oblivious-adversary
 :class:`~repro.core.sim_types.Schedule` (layout in `sim_types`); per-step
 draws enter the scan as ``xs`` slices, so the engine consumes bit-identical
 schedules to `sim_ref` — the parity suite checks trajectories step-for-step.
 
 Compiled programs are cached on the problem object keyed by
-(relaxation, p, T); ``alpha``, ``x0`` and the schedule are traced arguments,
-so figure sweeps over step sizes or seeds never recompile.
-:func:`simulate_sweep` vmaps one compiled program over stacked seeds for the
-multi-seed figure sweeps.
+(relaxation statics, p, T, fused); ``alpha``, ``x0``, the schedule AND the
+relaxation's float knobs (``drop_prob``/``beta``/``B_adv``) are traced
+arguments, so figure sweeps over step sizes, seeds or scheduler knobs never
+recompile.  :func:`simulate_sweep` vmaps one compiled program over stacked
+seeds; :func:`simulate_grid` goes further and vmaps over stacked
+*(problem, relaxation-knob, alpha, seed)* cases — same-shape (p, d)
+instances become a leading batch axis of one compiled program.
 """
 from __future__ import annotations
 
+from dataclasses import dataclass, field
 from typing import Optional
 
 import jax
@@ -43,6 +61,8 @@ import numpy as np
 from repro.core import compression as C
 from repro.core.sim_types import (Relaxation, Schedule, SimResult,
                                   make_schedule, make_shared_memory_schedule)
+from repro.kernels import sim_step as SSK
+
 
 def _interpret() -> bool:
     """Pallas kernels run compiled on TPU, interpreted elsewhere (CPU CI).
@@ -65,16 +85,58 @@ def _cache(problem) -> dict:
     return cache
 
 
+def _static_key(relax: Relaxation) -> tuple:
+    """The relaxation fields that shape the compiled program.  Float knobs
+    (drop_prob/beta/B_adv) are traced and deliberately excluded."""
+    return (relax.kind, relax.f, relax.tau_max, relax.compressor)
+
+
+def _knob_values(relax: Relaxation) -> dict:
+    """Traced float knobs, fed per-run so knob sweeps share one program."""
+    return {"drop_prob": jnp.float32(relax.drop_prob),
+            "beta": jnp.float32(relax.beta),
+            "B_adv": jnp.float32(relax.B_adv)}
+
+
+# "auto" engages the fused path only where it wins: below ~128 dims the
+# gradient matmul is too cheap for the fusion to pay for itself (the
+# BENCH_sim smoke grid at d=64 shows ~0.7-1x; d >= 256 shows 2-6x).
+AUTO_MIN_DIM = 128
+
+
+def _resolve_fused(problem, relax: Relaxation, fused) -> bool:
+    if fused == "auto":
+        return problem.dim >= AUTO_MIN_DIM and \
+            SSK.supports_fused(problem, relax)
+    if fused is True:
+        if not SSK.supports_fused(problem, relax):
+            raise ValueError(
+                f"fused=True unsupported for kind={relax.kind!r} on "
+                f"{type(problem).__name__} (needs quadratic sim_data and a "
+                f"kind in {SSK.FUSED_KINDS})")
+        return True
+    if fused is False:
+        return False
+    raise ValueError(f"fused must be True, False or 'auto', got {fused!r}")
+
+
 # ---------------------------------------------------------------------------
 # step functions
 # ---------------------------------------------------------------------------
 
-def _build_run(problem, relax: Relaxation, p: int, T: int):
-    """Return run(x0, alpha, key, per_step, per_run) -> (xs, gaps/alpha^2).
+def _build_run(problem, relax: Relaxation, p: int, T: int,
+               fused: bool = False):
+    """Return run(x0, alpha, key, per_step, per_run, knobs, data)
+    -> (xs, gaps/alpha^2).
 
     ``xs`` is the (T, d) trajectory of the auxiliary parameter x (post-step),
     recorded as scan outputs; the caller subsamples it for loss eval.
+    ``knobs`` are the relaxation's traced float knobs; ``data`` is the
+    problem-as-pytree (fused path only — the unfused oracle step closes
+    over the problem and ignores it).
     """
+    if fused:
+        return _build_fused_run(problem, relax, p, T)
     kind = relax.kind
     d = problem.dim
     eye = jnp.asarray(np.eye(p, dtype=bool))
@@ -90,126 +152,128 @@ def _build_run(problem, relax: Relaxation, p: int, T: int):
     def fmat(m):                           # bool (p,p) -> f32 for the MXU
         return m.astype(jnp.float32)
 
-    def step(carry, xs):
-        if has_pre:
-            t, step_s, draw = xs
-            grads_at = lambda views: problem.batch_grads_at(views, draw)
-        else:
-            t, step_s = xs
-            carry["key"], sub = jax.random.split(carry["key"])
-            grads_at = lambda views: problem.batch_grads(views, sub)
-        x, v, alive = carry["x"], carry["v"], carry["alive"]
-        scale = carry["alpha"] / p
+    def run(x0, alpha, key, per_step, per_run, knobs, data):
+        del data
 
-        if kind == "adversarial":
-            views = x[None] + carry["alpha"] * relax.B_adv * \
-                carry["adv_dir"][None]
-            g = grads_at(jnp.broadcast_to(views, (p, d)))
-            x = x - scale * jnp.sum(g, 0)
-            v = jnp.broadcast_to(x[None], (p, d))
+        def step(carry, xs):
+            if has_pre:
+                t, step_s, draw = xs
+                grads_at = lambda views: problem.batch_grads_at(views, draw)
+            else:
+                t, step_s = xs
+                carry["key"], sub = jax.random.split(carry["key"])
+                grads_at = lambda views: problem.batch_grads(views, sub)
+            x, v, alive = carry["x"], carry["v"], carry["alive"]
+            scale = carry["alpha"] / p
 
-        elif kind == "sync":
-            g = grads_at(v)
-            upd = scale * jnp.sum(g, 0)
-            x = x - upd
-            v = v - upd[None]
+            if kind == "adversarial":
+                views = x[None] + carry["alpha"] * knobs["B_adv"] * \
+                    carry["adv_dir"][None]
+                g = grads_at(jnp.broadcast_to(views, (p, d)))
+                x = x - scale * jnp.sum(g, 0)
+                v = jnp.broadcast_to(x[None], (p, d))
 
-        elif kind in ("crash", "crash_subst"):
-            g = grads_at(v)
-            crashing = alive & (carry["crash_step"] == t)
-            new_alive = alive & ~crashing
-            # recv[i, j]: does i receive j's broadcast this step?
-            base = alive[:, None] & alive[None, :]
-            heard = (carry["hear_u"].T < 0.5) & new_alive[:, None] & ~eye
-            recv = jnp.where(crashing[None, :], heard, base)
-            in_recv = jnp.any(recv, axis=0)           # heard by >= 1 node
-            x = x - scale * (fmat(in_recv) @ g)
-            got = fmat(recv) @ g
-            if kind == "crash_subst":
-                missed = jnp.sum((~recv) & in_recv[None, :], axis=1)
-                got = got + missed.astype(jnp.float32)[:, None] * g
-            v = jnp.where(new_alive[:, None], v - scale * got, v)
-            alive = new_alive
+            elif kind == "sync":
+                g = grads_at(v)
+                upd = scale * jnp.sum(g, 0)
+                x = x - upd
+                v = v - upd[None]
 
-        elif kind == "omission":
-            g = grads_at(v)
-            ring, cnt = carry["ring"], carry["cnt"]
-            cand = (step_s["drop_u"] < relax.drop_prob) & ~eye
-            # first-come quota: at most f messages outstanding, row-major
-            # (i, j) order — identical to the oracle's loop order
-            cf = cand.reshape(-1)
-            before = jnp.cumsum(cf) - cf
-            take = (cf & (before < relax.f - jnp.sum(cnt))).reshape(p, p)
-            gsum = jnp.sum(g, 0)
-            x = x - scale * gsum
-            v = v - scale * (gsum[None] - fmat(take) @ g)
-            for e in (0, 1):                          # extra delay in {0, 1}
-                m = take & (step_s["extra_delay"] == e)
-                slot = (t + 1 + e) % om_ring
-                ring = ring.at[slot].add(scale * (fmat(m) @ g))
-                cnt = cnt.at[slot].add(jnp.sum(m))
-            v = v - ring[t % om_ring]
-            carry["ring"] = ring.at[t % om_ring].set(0.0)
-            carry["cnt"] = cnt.at[t % om_ring].set(0)
+            elif kind in ("crash", "crash_subst"):
+                g = grads_at(v)
+                crashing = alive & (carry["crash_step"] == t)
+                new_alive = alive & ~crashing
+                # recv[i, j]: does i receive j's broadcast this step?
+                base = alive[:, None] & alive[None, :]
+                heard = (carry["hear_u"].T < 0.5) & new_alive[:, None] & ~eye
+                recv = jnp.where(crashing[None, :], heard, base)
+                in_recv = jnp.any(recv, axis=0)           # heard by >= 1 node
+                x = x - scale * (fmat(in_recv) @ g)
+                got = fmat(recv) @ g
+                if kind == "crash_subst":
+                    missed = jnp.sum((~recv) & in_recv[None, :], axis=1)
+                    got = got + missed.astype(jnp.float32)[:, None] * g
+                v = jnp.where(new_alive[:, None], v - scale * got, v)
+                alive = new_alive
 
-        elif kind == "async":
-            g = grads_at(v)
-            delays = step_s["delays"]
-            x = x - scale * jnp.sum(g, 0)
-            v = v - scale * (fmat(delays == 0) @ g)
-            if as_ring > 1:
-                ring = carry["ring"]
-                for dl in range(1, relax.tau_max):
-                    m = delays == dl
-                    ring = ring.at[(t + dl) % as_ring].add(
-                        scale * (fmat(m) @ g))
-                v = v - ring[t % as_ring]
-                carry["ring"] = ring.at[t % as_ring].set(0.0)
+            elif kind == "omission":
+                g = grads_at(v)
+                ring, cnt = carry["ring"], carry["cnt"]
+                cand = (step_s["drop_u"] < knobs["drop_prob"]) & ~eye
+                # first-come quota: at most f messages outstanding, row-major
+                # (i, j) order — identical to the oracle's loop order
+                cf = cand.reshape(-1)
+                before = jnp.cumsum(cf) - cf
+                take = (cf & (before < relax.f - jnp.sum(cnt))).reshape(p, p)
+                gsum = jnp.sum(g, 0)
+                x = x - scale * gsum
+                v = v - scale * (gsum[None] - fmat(take) @ g)
+                for e in (0, 1):                          # extra delay in {0, 1}
+                    m = take & (step_s["extra_delay"] == e)
+                    slot = (t + 1 + e) % om_ring
+                    ring = ring.at[slot].add(scale * (fmat(m) @ g))
+                    cnt = cnt.at[slot].add(jnp.sum(m))
+                v = v - ring[t % om_ring]
+                carry["ring"] = ring.at[t % om_ring].set(0.0)
+                carry["cnt"] = cnt.at[t % om_ring].set(0)
 
-        elif kind == "ef_comp":
-            g = grads_at(v)
-            payloads, carry["err"] = C.ef_compress_rows(
-                relax.compressor, carry["alpha"] * g, carry["err"],
-                interpret=_interpret())
-            x = x - scale * jnp.sum(g, 0)
-            v = v - jnp.sum(payloads, 0)[None] / p
+            elif kind == "async":
+                g = grads_at(v)
+                delays = step_s["delays"]
+                x = x - scale * jnp.sum(g, 0)
+                v = v - scale * (fmat(delays == 0) @ g)
+                if as_ring > 1:
+                    ring = carry["ring"]
+                    for dl in range(1, relax.tau_max):
+                        m = delays == dl
+                        ring = ring.at[(t + dl) % as_ring].add(
+                            scale * (fmat(m) @ g))
+                    v = v - ring[t % as_ring]
+                    carry["ring"] = ring.at[t % as_ring].set(0.0)
 
-        elif kind == "elastic_norm":
-            g = grads_at(v)
-            perm = step_s["perm"]                     # (p, p) arrival order
-            norms = jnp.sqrt(jnp.sum(g * g, axis=1))
-            self_m = perm == jnp.arange(p)[:, None]
-            contrib = jnp.where(self_m, 0.0, norms[perm])
-            acc_before = jnp.cumsum(contrib, axis=1) - contrib
-            inc = (acc_before < relax.beta * norms[:, None]) | self_m
-            recv = jnp.zeros((p, p), bool).at[
-                jnp.arange(p)[:, None], perm].set(inc)
-            gsum = jnp.sum(g, 0)
-            recvg = fmat(recv) @ g
-            x = x - scale * gsum
-            v = v - scale * recvg - carry["defer"]
-            carry["defer"] = scale * (gsum[None] - recvg)
+            elif kind == "ef_comp":
+                g = grads_at(v)
+                payloads, carry["err"] = C.ef_compress_rows(
+                    relax.compressor, carry["alpha"] * g, carry["err"],
+                    interpret=_interpret())
+                x = x - scale * jnp.sum(g, 0)
+                v = v - jnp.sum(payloads, 0)[None] / p
 
-        elif kind == "elastic_variance":
-            g = grads_at(v)
-            drop = (step_s["drop_u"] < relax.drop_prob) & ~eye
-            nd = jnp.sum(drop, axis=1).astype(jnp.float32)[:, None]
-            gsum = jnp.sum(g, 0)
-            dropg = fmat(drop) @ g
-            # keep@g = gsum - g - drop@g, so upd = gsum + nd*g - drop@g
-            x = x - scale * gsum
-            v = v - scale * (gsum[None] + nd * g - dropg) - carry["defer"]
-            carry["defer"] = scale * (dropg - nd * g)
+            elif kind == "elastic_norm":
+                g = grads_at(v)
+                perm = step_s["perm"]                     # (p, p) arrival order
+                norms = jnp.sqrt(jnp.sum(g * g, axis=1))
+                self_m = perm == jnp.arange(p)[:, None]
+                contrib = jnp.where(self_m, 0.0, norms[perm])
+                acc_before = jnp.cumsum(contrib, axis=1) - contrib
+                inc = (acc_before < knobs["beta"] * norms[:, None]) | self_m
+                recv = jnp.zeros((p, p), bool).at[
+                    jnp.arange(p)[:, None], perm].set(inc)
+                gsum = jnp.sum(g, 0)
+                recvg = fmat(recv) @ g
+                x = x - scale * gsum
+                v = v - scale * recvg - carry["defer"]
+                carry["defer"] = scale * (gsum[None] - recvg)
 
-        else:
-            raise ValueError(kind)
+            elif kind == "elastic_variance":
+                g = grads_at(v)
+                drop = (step_s["drop_u"] < knobs["drop_prob"]) & ~eye
+                nd = jnp.sum(drop, axis=1).astype(jnp.float32)[:, None]
+                gsum = jnp.sum(g, 0)
+                dropg = fmat(drop) @ g
+                # keep@g = gsum - g - drop@g, so upd = gsum + nd*g - drop@g
+                x = x - scale * gsum
+                v = v - scale * (gsum[None] + nd * g - dropg) - carry["defer"]
+                carry["defer"] = scale * (dropg - nd * g)
 
-        carry["x"], carry["v"], carry["alive"] = x, v, alive
-        sq = jnp.sum((x[None] - v) ** 2, axis=1)
-        gap2 = jnp.max(jnp.where(alive, sq, -jnp.inf))
-        return carry, (x, gap2)
+            else:
+                raise ValueError(kind)
 
-    def run(x0, alpha, key, per_step, per_run):
+            carry["x"], carry["v"], carry["alive"] = x, v, alive
+            sq = jnp.sum((x[None] - v) ** 2, axis=1)
+            gap2 = jnp.max(jnp.where(alive, sq, -jnp.inf))
+            return carry, (x, gap2)
+
         x0 = x0.astype(jnp.float32)
         carry = {"x": x0, "v": jnp.tile(x0, (p, 1)),
                  "alive": jnp.ones(p, bool), "alpha": alpha}
@@ -233,6 +297,63 @@ def _build_run(problem, relax: Relaxation, p: int, T: int):
         if kind in ("elastic_norm", "elastic_variance"):
             carry["defer"] = jnp.zeros((p, d), jnp.float32)
         _, (xs, gaps2) = jax.lax.scan(step, carry, xs_in)
+        return xs, gaps2 / (alpha * alpha)
+
+    return run
+
+
+def _build_fused_run(problem, relax: Relaxation, p: int, T: int):
+    """Fused fast path (`repro.kernels.sim_step`): delivery tensors for the
+    whole run are precomputed in one vectorized pass, and the scan step is
+    one fused kernel call — step-for-step equivalent to the unfused oracle
+    step up to fp32 reduction order."""
+    kind = relax.kind
+    d = problem.dim
+    has_defer = kind == "elastic_variance"
+
+    def run(x0, alpha, key, per_step, per_run, knobs, data):
+        x0 = x0.astype(jnp.float32)
+        a, x_star = data["A"], data["x_star"]
+        scale = alpha / p
+        draws = problem.presample_from_data(data, key, T, p)
+
+        if kind == "sync":
+            # every view equals x exactly: the p-view gradient stack
+            # collapses to one matvec + the worker-summed noise row
+            nsc = scale * jnp.sum(draws, axis=1)          # (T, d)
+
+            def step(x, n):
+                x = SSK.fused_sync_step(x, a, x_star, n, alpha)
+                return x, x
+
+            _, xs = jax.lax.scan(step, x0, nsc)
+            return xs, jnp.zeros(T, jnp.float32)
+
+        u, new_alive = SSK.delivery_tensors(kind, p, T, per_step, per_run,
+                                            knobs)
+        u = scale * u
+
+        def step(carry, xs_in):
+            u_t, n_t, na = xs_in
+            if has_defer:
+                x, v, defer = SSK.fused_delivery_step(
+                    carry["v"], carry["x"], a, x_star, n_t, u_t,
+                    carry["defer"])
+                carry = {"x": x, "v": v, "defer": defer}
+            else:
+                x, v = SSK.fused_delivery_step(
+                    carry["v"], carry["x"], a, x_star, n_t, u_t)
+                carry = {"x": x, "v": v}
+            sq = jnp.sum((x[None] - v) ** 2, axis=1)
+            gap2 = jnp.max(jnp.where(na, sq, -jnp.inf))
+            return carry, (x, gap2)
+
+        carry = {"x": x0, "v": jnp.tile(x0, (p, 1))}
+        if has_defer:
+            carry["defer"] = jnp.zeros((p, d), jnp.float32)
+        if new_alive is None:
+            new_alive = jnp.ones((T, p), bool)
+        _, (xs, gaps2) = jax.lax.scan(step, carry, (u, draws, new_alive))
         return xs, gaps2 / (alpha * alpha)
 
     return run
@@ -280,49 +401,72 @@ def _build_shared_run(problem, p: int, T: int, tau_max: int):
 # compiled-program cache + result assembly
 # ---------------------------------------------------------------------------
 
-def _get_run(problem, key_tup, builder, vmapped: bool):
+def _get_run(problem, key_tup, builder, in_axes=None, outer_axes=None):
+    """jit (and optionally vmap, optionally twice) one run builder, cached
+    on the problem object.  ``in_axes`` batches cases; ``outer_axes`` adds a
+    second level over stacked problem instances (`simulate_grid`)."""
     cache = _cache(problem)
-    ck = ("vrun" if vmapped else "run",) + key_tup
+    ck = key_tup + (in_axes, outer_axes)
     if ck not in cache:
         run = builder()
-        if vmapped:
-            run = jax.vmap(run, in_axes=(None, None, 0, 0, 0))
+        if in_axes is not None:
+            run = jax.vmap(run, in_axes=in_axes)
+        if outer_axes is not None:
+            run = jax.vmap(run, in_axes=outer_axes)
         cache[ck] = jax.jit(run)
     return cache[ck]
 
 
-def _get_eval(problem):
+def _get_eval(problem, with_data: bool = False):
     cache = _cache(problem)
-    if "eval" not in cache:
-        def ev(xs_rec):
-            losses = jax.vmap(problem.loss)(xs_rec)
-            gns = jax.vmap(lambda xx: jnp.sum(problem.grad(xx) ** 2))(xs_rec)
-            return losses, gns
-        cache["eval"] = jax.jit(ev)
-    return cache["eval"]
+    name = "eval_data" if with_data else "eval"
+    if name not in cache:
+        if with_data:
+            loss_d = type(problem).loss_from_data
+            grad_d = type(problem).grad_from_data
+
+            def ev(xs_rec, data):
+                losses = jax.vmap(lambda xx: loss_d(data, xx))(xs_rec)
+                gns = jax.vmap(
+                    lambda xx: jnp.sum(grad_d(data, xx) ** 2))(xs_rec)
+                return losses, gns
+        else:
+            def ev(xs_rec, data):
+                del data
+                losses = jax.vmap(problem.loss)(xs_rec)
+                gns = jax.vmap(
+                    lambda xx: jnp.sum(problem.grad(xx) ** 2))(xs_rec)
+                return losses, gns
+        cache[name] = jax.jit(ev)
+    return cache[name]
 
 
 def _finalize(problem, xs, gaps2, alpha, record_every) -> SimResult:
     xs_rec = xs[::record_every]
-    losses, gns = _get_eval(problem)(xs_rec)
+    losses, gns = _get_eval(problem)(xs_rec, None)
     return SimResult(np.asarray(losses), np.asarray(gns),
                      np.asarray(gaps2, np.float64), np.asarray(xs[-1]),
                      record_every, alpha)
 
 
-def _finalize_batch(problem, xs, gaps2, alpha, record_every) -> list:
-    """Sweep finalize: ONE loss/grad eval + bulk transfer for all seeds
-    (xs (S, T, d)), instead of S sequential dispatches and device syncs."""
+def _finalize_batch(problem, xs, gaps2, alphas, record_every,
+                    data=None) -> list:
+    """Batched finalize: ONE loss/grad eval + bulk transfer for all runs
+    (xs (B, T, d)), instead of B sequential dispatches and device syncs.
+    ``alphas`` is a scalar (shared) or one alpha per run."""
     n, t, d = xs.shape
     xs_rec = xs[:, ::record_every]
     n_rec = xs_rec.shape[1]
-    losses, gns = _get_eval(problem)(xs_rec.reshape(n * n_rec, d))
+    losses, gns = _get_eval(problem, data is not None)(
+        xs_rec.reshape(n * n_rec, d), data)
     losses = np.asarray(losses).reshape(n, n_rec)
     gns = np.asarray(gns).reshape(n, n_rec)
     gaps2 = np.asarray(gaps2, np.float64)
     x_fin = np.asarray(xs[:, -1])
+    if np.ndim(alphas) == 0:
+        alphas = [alphas] * n
     return [SimResult(losses[i], gns[i], gaps2[i], x_fin[i],
-                      record_every, alpha) for i in range(n)]
+                      record_every, float(alphas[i])) for i in range(n)]
 
 
 def _as_device(schedule: Schedule):
@@ -330,41 +474,183 @@ def _as_device(schedule: Schedule):
     return to_j(schedule.per_step), to_j(schedule.per_run)
 
 
+def _stack_schedules(scheds) -> tuple:
+    per_step = jax.tree.map(lambda *a: jnp.asarray(np.stack(a)),
+                            *[s.per_step for s in scheds])
+    per_run = jax.tree.map(lambda *a: jnp.asarray(np.stack(a)),
+                           *[s.per_run for s in scheds])
+    return per_step, per_run
+
+
+# ---------------------------------------------------------------------------
+# entry points
+# ---------------------------------------------------------------------------
+
 def simulate_scan(problem, relax: Relaxation, p: int, alpha: float, T: int,
                   seed: int = 0, x0=None, record_every: int = 10,
-                  schedule: Optional[Schedule] = None) -> SimResult:
+                  schedule: Optional[Schedule] = None,
+                  fused="auto") -> SimResult:
     """Compiled equivalent of :func:`repro.core.sim_ref.simulate_ref`."""
     if schedule is None:
         schedule = make_schedule(relax, p, problem.dim, T, seed)
     if x0 is None:
         x0 = np.zeros(problem.dim, np.float32)
-    run = _get_run(problem, (relax, p, T),
-                   lambda: _build_run(problem, relax, p, T), vmapped=False)
+    use_fused = _resolve_fused(problem, relax, fused)
+    run = _get_run(problem, (_static_key(relax), p, T, use_fused),
+                   lambda: _build_run(problem, relax, p, T, use_fused))
     per_step, per_run = _as_device(schedule)
+    data = problem.sim_data() if use_fused else None
     xs, gaps2 = run(jnp.asarray(x0, jnp.float32), jnp.float32(alpha),
-                    jax.random.PRNGKey(seed + 1), per_step, per_run)
+                    jax.random.PRNGKey(seed + 1), per_step, per_run,
+                    _knob_values(relax), data)
     return _finalize(problem, xs, gaps2, alpha, record_every)
 
 
+_SWEEP_AXES = (None, None, 0, 0, 0, None, None)
+_CASE_AXES = (None, 0, 0, 0, 0, 0, None)
+_PROBLEM_AXES = (None, None, None, None, None, None, 0)
+
+
 def simulate_sweep(problem, relax: Relaxation, p: int, alpha: float, T: int,
-                   seeds, x0=None, record_every: int = 10) -> list:
+                   seeds, x0=None, record_every: int = 10,
+                   fused="auto") -> list:
     """vmap one compiled run over seeds: schedules and gradient keys get a
     leading seed axis; x0/alpha are broadcast. Returns [SimResult] per seed.
     """
     seeds = list(seeds)
     scheds = [make_schedule(relax, p, problem.dim, T, s) for s in seeds]
-    per_step = jax.tree.map(lambda *a: jnp.asarray(np.stack(a)),
-                            *[s.per_step for s in scheds])
-    per_run = jax.tree.map(lambda *a: jnp.asarray(np.stack(a)),
-                           *[s.per_run for s in scheds])
+    per_step, per_run = _stack_schedules(scheds)
     keys = jnp.stack([jax.random.PRNGKey(s + 1) for s in seeds])
     if x0 is None:
         x0 = np.zeros(problem.dim, np.float32)
-    vrun = _get_run(problem, (relax, p, T),
-                    lambda: _build_run(problem, relax, p, T), vmapped=True)
+    use_fused = _resolve_fused(problem, relax, fused)
+    vrun = _get_run(problem, (_static_key(relax), p, T, use_fused),
+                    lambda: _build_run(problem, relax, p, T, use_fused),
+                    in_axes=_SWEEP_AXES)
+    data = problem.sim_data() if use_fused else None
     xs, gaps2 = vrun(jnp.asarray(x0, jnp.float32), jnp.float32(alpha),
-                     keys, per_step, per_run)
-    return _finalize_batch(problem, xs, gaps2, alpha, record_every)
+                     keys, per_step, per_run, _knob_values(relax), data)
+    return _finalize_batch(problem, xs, gaps2, alpha, record_every,
+                           data=data)
+
+
+@dataclass
+class GridResult:
+    """Results of :func:`simulate_grid`, keyed by
+    ``(i_problem, i_relax, p, i_alpha, seed)``."""
+
+    results: dict = field(default_factory=dict)
+
+    def __getitem__(self, key) -> SimResult:
+        return self.results[key]
+
+    def __len__(self) -> int:
+        return len(self.results)
+
+    def select(self, i_problem=None, i_relax=None, p=None, i_alpha=None,
+               seed=None) -> list:
+        """All results matching the given coordinates, key-sorted."""
+        want = (i_problem, i_relax, p, i_alpha, seed)
+        return [r for k, r in sorted(self.results.items())
+                if all(w is None or kk == w for kk, w in zip(k, want))]
+
+
+def simulate_grid(problems, relaxations, p_list, alphas, T: int,
+                  seeds=(0,), x0=None, record_every: int = 10,
+                  fused="auto") -> GridResult:
+    """Batched multi-(p, d) sweeps: one compiled program per
+    (relaxation-statics, p) group instead of a Python loop of
+    ``simulate_sweep`` calls.
+
+    The cartesian product problems x relaxations x alphas x seeds is run
+    for every p in ``p_list``.  Within a group, cases (schedule, alpha,
+    float knobs, gradient key) stack on a vmap axis; when the group is
+    fused and several same-shape problem instances are given, their
+    ``sim_data`` pytrees stack on a SECOND vmap axis (A becomes (B, d, d))
+    — the whole grid is then a single XLA program.  Relaxations in one
+    group may differ only in float knobs (drop_prob/beta/B_adv); kinds or
+    integer bounds that differ compile separate groups, transparently.
+
+    Unfused groups with several problems fall back to one program per
+    problem (the oracle step closes over the problem object).  Every
+    (kind, seed, p, T) trajectory is identical to ``simulate_scan``'s.
+    """
+    problems = problems if isinstance(problems, (list, tuple)) \
+        else [problems]
+    relaxations = relaxations if isinstance(relaxations, (list, tuple)) \
+        else [relaxations]
+    p_list = [p_list] if isinstance(p_list, int) else list(p_list)
+    alphas = [alphas] if isinstance(alphas, (int, float)) else list(alphas)
+    seeds = [seeds] if isinstance(seeds, int) else list(seeds)
+    d = problems[0].dim
+    if any(pr.dim != d for pr in problems):
+        raise ValueError("simulate_grid problems must share dim")
+    if x0 is None:
+        x0 = np.zeros(d, np.float32)
+    x0j = jnp.asarray(x0, jnp.float32)
+
+    grid = GridResult()
+    groups: dict = {}
+    for ir, r in enumerate(relaxations):
+        groups.setdefault(_static_key(r), []).append(ir)
+
+    for p in p_list:
+        for skey, irs in groups.items():
+            relax0 = relaxations[irs[0]]
+            use_fused = _resolve_fused(problems[0], relax0, fused) and all(
+                SSK.supports_fused(pr, relax0) for pr in problems)
+            if fused is True and not use_fused:
+                raise ValueError(
+                    "fused=True but not every problem in the grid supports "
+                    f"the fused path for kind={relax0.kind!r}")
+            cases = [(ir, ia, s) for ir in irs
+                     for ia in range(len(alphas)) for s in seeds]
+            scheds = [make_schedule(relaxations[ir], p, d, T, s)
+                      for ir, _, s in cases]
+            per_step, per_run = _stack_schedules(scheds)
+            alph = jnp.asarray([alphas[ia] for _, ia, _ in cases],
+                               jnp.float32)
+            keys = jnp.stack([jax.random.PRNGKey(s + 1)
+                              for _, _, s in cases])
+            knobs = jax.tree.map(
+                lambda *a: jnp.stack(a),
+                *[_knob_values(relaxations[ir]) for ir, _, _ in cases])
+            alphas_per_case = [alphas[ia] for _, ia, _ in cases]
+
+            if use_fused:
+                multi = len(problems) > 1
+                data = jax.tree.map(
+                    lambda *a: jnp.stack(a),
+                    *[pr.sim_data() for pr in problems]) if multi \
+                    else problems[0].sim_data()
+                vrun = _get_run(
+                    problems[0], ("grid", skey, p, T, True, multi),
+                    lambda: _build_run(problems[0], relax0, p, T, True),
+                    in_axes=_CASE_AXES,
+                    outer_axes=_PROBLEM_AXES if multi else None)
+                xs, gaps2 = vrun(x0j, alph, keys, per_step, per_run, knobs,
+                                 data)
+                if not multi:
+                    xs, gaps2 = xs[None], gaps2[None]
+                for ip, prob in enumerate(problems):
+                    res = _finalize_batch(prob, xs[ip], gaps2[ip],
+                                          alphas_per_case, record_every,
+                                          data=prob.sim_data())
+                    for (ir, ia, s), r in zip(cases, res):
+                        grid.results[(ip, ir, p, ia, s)] = r
+            else:
+                for ip, prob in enumerate(problems):
+                    vrun = _get_run(
+                        prob, ("grid", skey, p, T, False),
+                        lambda: _build_run(prob, relax0, p, T, False),
+                        in_axes=_CASE_AXES)
+                    xs, gaps2 = vrun(x0j, alph, keys, per_step, per_run,
+                                     knobs, None)
+                    res = _finalize_batch(prob, xs, gaps2, alphas_per_case,
+                                          record_every)
+                    for (ir, ia, s), r in zip(cases, res):
+                        grid.results[(ip, ir, p, ia, s)] = r
+    return grid
 
 
 def simulate_shared_memory_scan(problem, p: int, alpha: float, T: int,
@@ -378,8 +664,7 @@ def simulate_shared_memory_scan(problem, p: int, alpha: float, T: int,
     if x0 is None:
         x0 = np.zeros(problem.dim, np.float32)
     run = _get_run(problem, ("shm", p, T, tau_max),
-                   lambda: _build_shared_run(problem, p, T, tau_max),
-                   vmapped=False)
+                   lambda: _build_shared_run(problem, p, T, tau_max))
     per_step, per_run = _as_device(schedule)
     xs, gaps2 = run(jnp.asarray(x0, jnp.float32), jnp.float32(alpha),
                     jax.random.PRNGKey(seed + 1), per_step, per_run)

@@ -1,0 +1,42 @@
+"""Compat shims for jax.sharding / shard_map API drift.
+
+Same pattern as `repro.kernels.pltpu_compat`: each renamed/moved jax API
+the production path touches is absorbed in exactly one function here, so
+the trainer and the multidevice tests run unchanged across the jax 0.4/0.5+
+series:
+
+  * ``jax.sharding.AxisType`` (+ the ``axis_types=`` kwarg of
+    ``jax.make_mesh``) only exists on newer jax — :func:`make_mesh` passes
+    Auto axis types when available and plain meshes otherwise,
+  * ``jax.shard_map`` was promoted from ``jax.experimental.shard_map`` with
+    ``check_rep`` renamed to ``check_vma`` — :func:`shard_map` routes to
+    whichever exists.
+"""
+from __future__ import annotations
+
+import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``{"axis_types": (Auto,) * n}`` when this jax has AxisType, else {}."""
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def make_mesh(shape, names):
+    """``jax.make_mesh`` with Auto axis types where supported."""
+    return jax.make_mesh(shape, names, **axis_types_kwargs(len(shape)))
+
+
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
+    """Version-portable ``shard_map`` over all mesh axes.  ``check`` maps to
+    ``check_vma`` (new jax) / ``check_rep`` (old jax)."""
+    sm = getattr(jax, "shard_map", None)
+    if sm is not None:
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                  check_vma=check)
+    from jax.experimental.shard_map import shard_map as _sm
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+               check_rep=check)

@@ -1,0 +1,6 @@
+from repro.kernels.sim_step.ops import (FUSED_KINDS, delivery_tensors,
+                                        fused_delivery_step, fused_sync_step,
+                                        supports_fused)
+
+__all__ = ["FUSED_KINDS", "delivery_tensors", "fused_delivery_step",
+           "fused_sync_step", "supports_fused"]

@@ -1,0 +1,140 @@
+"""Fused simulator-step Pallas TPU kernels.
+
+One kernel launch replaces the whole per-step pipeline of the ``lax.scan``
+simulator engine for the `Quadratic` testbed:
+
+  delivery            quadratic gradient        apply
+  U (m, p)   x   G = (V - x*) @ A + noise   ->  x' = x - P[0]
+                                                 V' = V - P[1:1+p] - defer
+                 P = U @ G  (one stacked MXU     defer' = P[1+p:1+2p]
+                 matmul for the x-row, the
+                 v-rows and the defer rows)
+
+The delivery tensor ``U`` is the relaxation: who receives whose gradient
+this step, with the ``alpha/p`` step scale already folded in (see
+`ops.delivery_tensors`).  Rows of ``U`` belonging to dead/deferred workers
+are zero, so masking needs no extra ``where`` pass.  ``sync`` degenerates
+further: every view equals ``x`` exactly, so the kernel collapses to one
+(1, d) @ (d, d) matvec plus the pre-summed noise row — a p-fold FLOP cut on
+the dense-matvec floor that dominates d >= 256.
+
+Tiling: the grid walks d in ``dn``-wide column blocks (128-lane multiples on
+TPU).  Per block the kernel reads the full (p, d) view stack and the
+(d, dn) column panel of ``A`` — the (p, d) @ (d, dn) gradient panel and the
+(m, p) @ (p, dn) delivery panel both land on the MXU; everything else is
+VPU element-wise.  ``interpret=True`` is the CPU path used by the parity
+suite (off-TPU perf dispatch uses the fused jnp oracle in `ref.py`, which
+is the same math without the interpreter overhead).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_panels(v_ref, xstar_ref, a_ref, x_ref, n_ref, u_ref, block_d):
+    """Shared MXU body: gradient panel G, delivery panel P = U @ G, and the
+    column block of V this grid step updates."""
+    j = pl.program_id(0)
+    vc = v_ref[...] - xstar_ref[...]                     # (p, d)
+    g = jnp.dot(vc, a_ref[...],
+                preferred_element_type=jnp.float32) + n_ref[...]
+    p_rows = jnp.dot(u_ref[...], g,
+                     preferred_element_type=jnp.float32)  # (m, dn)
+    v_blk = v_ref[:, pl.dslice(j * block_d, block_d)]
+    return p_rows, v_blk
+
+
+def _delivery_kernel(v_ref, xstar_ref, a_ref, x_ref, n_ref, u_ref,
+                     x_out_ref, v_out_ref, *, block_d: int):
+    p_rows, v_blk = _fused_panels(v_ref, xstar_ref, a_ref, x_ref, n_ref,
+                                  u_ref, block_d)
+    n_work = n_ref.shape[0]
+    x_out_ref[...] = x_ref[...] - p_rows[0:1, :]
+    v_out_ref[...] = v_blk - p_rows[1:1 + n_work, :]
+
+
+def _delivery_defer_kernel(v_ref, xstar_ref, a_ref, x_ref, n_ref, u_ref,
+                           defer_ref, x_out_ref, v_out_ref, defer_out_ref,
+                           *, block_d: int):
+    p_rows, v_blk = _fused_panels(v_ref, xstar_ref, a_ref, x_ref, n_ref,
+                                  u_ref, block_d)
+    n_work = n_ref.shape[0]
+    x_out_ref[...] = x_ref[...] - p_rows[0:1, :]
+    v_out_ref[...] = v_blk - p_rows[1:1 + n_work, :] - defer_ref[...]
+    defer_out_ref[...] = p_rows[1 + n_work:1 + 2 * n_work, :]
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("block_d", "has_defer", "interpret"))
+def delivery_step(v, x, a, x_star, noise, u, defer=None, *,
+                  block_d: int = 256, has_defer: bool = False,
+                  interpret: bool = False):
+    """One fused simulator step for the delivery-matrix relaxation kinds.
+
+    v (p, d) views; x (1, d); a (d, d); x_star (1, d); noise (p, d) this
+    step's pre-drawn gradient noise; u (m, p) scaled delivery tensor with
+    m = 1 + p rows (+ p defer rows when ``has_defer``); defer (p, d).
+    Returns (x', v'[, defer']).
+    """
+    p, d = v.shape
+    m = u.shape[0]
+    assert m == (1 + 2 * p if has_defer else 1 + p), (m, p, has_defer)
+    dn = block_d if d % block_d == 0 else d
+    grid = (d // dn,)
+    blk = lambda rows: pl.BlockSpec((rows, dn), lambda j: (0, j))
+    full = lambda rows, cols: pl.BlockSpec((rows, cols), lambda j: (0, 0))
+    in_specs = [full(p, d), full(1, d), pl.BlockSpec((d, dn), lambda j: (0, j)),
+                blk(1), blk(p), full(m, p)]
+    out_specs = [blk(1), blk(p)]
+    out_shape = [jax.ShapeDtypeStruct((1, d), jnp.float32),
+                 jax.ShapeDtypeStruct((p, d), jnp.float32)]
+    operands = [v, x_star, a, x, noise, u]
+    if has_defer:
+        in_specs.append(blk(p))
+        out_specs.append(blk(p))
+        out_shape.append(jax.ShapeDtypeStruct((p, d), jnp.float32))
+        operands.append(defer)
+    kern = functools.partial(
+        _delivery_defer_kernel if has_defer else _delivery_kernel,
+        block_d=dn)
+    out = pl.pallas_call(kern, grid=grid, in_specs=in_specs,
+                         out_specs=out_specs, out_shape=out_shape,
+                         interpret=interpret)(*operands)
+    return tuple(out)
+
+
+def _sync_kernel(x_ref, xstar_ref, a_ref, nsum_ref, c_ref, x_out_ref, *,
+                 block_d: int):
+    j = pl.program_id(0)
+    base = jnp.dot(x_ref[...] - xstar_ref[...], a_ref[...],
+                   preferred_element_type=jnp.float32)   # (1, dn)
+    x_blk = x_ref[:, pl.dslice(j * block_d, block_d)]
+    x_out_ref[...] = x_blk - c_ref[0, 0] * base - nsum_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("block_d", "interpret"))
+def sync_step(x, a, x_star, nsum, c, *, block_d: int = 256,
+              interpret: bool = False):
+    """Fused ``sync`` step: all p views equal x exactly, so the gradient
+    collapses to one matvec.  x, x_star (1, d); a (d, d); nsum (1, d) the
+    pre-scaled worker-summed noise ``(alpha/p) * sum_i noise_i``; c (1, 1)
+    the collapsed gradient weight ``alpha`` (= p * alpha/p).  Returns x'.
+    """
+    _, d = x.shape
+    dn = block_d if d % block_d == 0 else d
+    blk = pl.BlockSpec((1, dn), lambda j: (0, j))
+    return pl.pallas_call(
+        functools.partial(_sync_kernel, block_d=dn),
+        grid=(d // dn,),
+        in_specs=[pl.BlockSpec((1, d), lambda j: (0, 0)),
+                  pl.BlockSpec((1, d), lambda j: (0, 0)),
+                  pl.BlockSpec((d, dn), lambda j: (0, j)), blk,
+                  pl.BlockSpec((1, 1), lambda j: (0, 0))],
+        out_specs=blk,
+        out_shape=jax.ShapeDtypeStruct((1, d), jnp.float32),
+        interpret=interpret,
+    )(x, x_star, a, nsum, c)

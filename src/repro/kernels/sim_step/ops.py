@@ -1,0 +1,133 @@
+"""Dispatch + delivery-tensor precompute for the fused simulator step.
+
+The fused fast path rests on two observations about the scan engine's
+per-step pipeline on the `Quadratic` testbed:
+
+  1. *Delivery is schedule-determined.*  For the fused relaxation kinds the
+     (p, p) "who receives whose gradient" matrices depend only on the
+     pre-drawn oblivious-adversary schedule — crash times and hear draws
+     for ``crash``/``crash_subst``, drop draws for ``elastic_variance`` —
+     never on the iterates.  So the whole run's delivery tensors are built
+     in ONE vectorized pass over T before the scan
+     (:func:`delivery_tensors`), and the scan step degenerates to the fused
+     kernel call: the ~10 small mask/select ops per step that dominate at
+     d ~ 256 disappear from the loop body.
+
+  2. *Everything applied is linear in the gradient panel.*  The x-row, the
+     p view-rows and (for the 1-step elastic scheduler) the p defer-rows
+     are all rows of ``U @ G`` for one stacked (1+p(+p), p) matrix — one
+     MXU matmul instead of three.
+
+``impl`` dispatch: ``"kernel"`` is the Pallas TPU kernel (`kernel.py`,
+interpret mode off-TPU — used by the parity suite), ``"ref"`` the fused
+jnp oracle (`ref.py`), ``"auto"`` picks the kernel on TPU and the oracle
+elsewhere (same math; the oracle avoids pure interpreter overhead on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.sim_step import kernel as K
+from repro.kernels.sim_step import ref as R
+
+#: Relaxation kinds with a fused step.  ``sync`` collapses to one matvec
+#: (all views equal x exactly); the others are delivery-tensor kinds.
+FUSED_KINDS = ("sync", "crash", "crash_subst", "elastic_variance")
+
+
+def supports_fused(problem, relax) -> bool:
+    """Fused path needs a quadratic-structured problem (dense ``A`` /
+    ``x_star`` sim data + presampleable noise) and a fused kind."""
+    if relax.kind not in FUSED_KINDS:
+        return False
+    if not hasattr(problem, "sim_data") or \
+            not hasattr(problem, "presample_from_data"):
+        return False
+    data = problem.sim_data()
+    return "A" in data and "x_star" in data
+
+
+def _resolve_impl(impl: str):
+    """-> (use_kernel, interpret)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "auto":
+        return on_tpu, False
+    if impl == "kernel":
+        return True, not on_tpu
+    if impl == "ref":
+        return False, False
+    raise ValueError(impl)
+
+
+def delivery_tensors(kind: str, p: int, T: int, per_step: dict,
+                     per_run: dict, knobs: dict):
+    """Precompute the whole run's delivery tensors, vectorized over T.
+
+    Returns (U (T, m, p) float32, new_alive (T, p) bool or None).  Row 0 of
+    each U[t] weights the x update, rows 1..p the view updates (rows of
+    dead workers are zero, so no masking pass is needed downstream), rows
+    p+1..2p (``elastic_variance`` only) the deferred-correction update.
+    The step scale alpha/p is NOT folded in here — callers scale U once.
+    """
+    eye = jnp.eye(p, dtype=bool)
+    if kind in ("crash", "crash_subst"):
+        ts = jnp.arange(T)[:, None]
+        crash_step = per_run["crash_step"]               # (p,)
+        alive = crash_step[None, :] >= ts                # (T, p)
+        crashing = crash_step[None, :] == ts
+        new_alive = alive & ~crashing
+        base = alive[:, :, None] & alive[:, None, :]
+        heard = (per_run["hear_u"].T[None] < 0.5) \
+            & new_alive[:, :, None] & ~eye[None]
+        recv = jnp.where(crashing[:, None, :], heard, base)
+        in_recv = jnp.any(recv, axis=1)                  # (T, p)
+        w_v = recv.astype(jnp.float32) * new_alive[:, :, None]
+        if kind == "crash_subst":
+            missed = jnp.sum((~recv) & in_recv[:, None, :], axis=2)
+            w_v = w_v + eye[None] * (
+                missed.astype(jnp.float32) * new_alive)[:, :, None]
+        u = jnp.concatenate(
+            [in_recv.astype(jnp.float32)[:, None], w_v], axis=1)
+        return u, new_alive
+    if kind == "elastic_variance":
+        drop = (per_step["drop_u"] < knobs["drop_prob"]) & ~eye[None]
+        nd = jnp.sum(drop, axis=2).astype(jnp.float32)   # (T, p)
+        diag_nd = eye[None] * nd[:, :, None]
+        w_v = jnp.ones((T, p, p), jnp.float32) + diag_nd - drop
+        w_d = drop.astype(jnp.float32) - diag_nd
+        u = jnp.concatenate(
+            [jnp.ones((T, 1, p), jnp.float32), w_v, w_d], axis=1)
+        return u, None
+    raise ValueError(f"no delivery tensor for kind {kind!r}")
+
+
+def fused_delivery_step(v, x, a, x_star, noise, u, defer=None, *,
+                        impl: str = "auto", block_d: int = 256):
+    """One fused step.  v (p, d); x (d,); u (m, p) with the step scale
+    already folded in; defer (p, d) or None.  Returns (x', v'[, defer'])
+    with x' (d,)."""
+    use_kernel, interpret = _resolve_impl(impl)
+    x2, xs2 = x[None, :], x_star[None, :]
+    if use_kernel:
+        out = K.delivery_step(v, x2, a, xs2, noise, u, defer,
+                              block_d=block_d, has_defer=defer is not None,
+                              interpret=interpret)
+    else:
+        out = R.delivery_step_ref(v, x2, a, xs2, noise, u, defer)
+    return (out[0][0], *out[1:])
+
+
+def fused_sync_step(x, a, x_star, nsum, c, *, impl: str = "auto",
+                    block_d: int = 256):
+    """One fused sync step.  x, x_star, nsum (d,); c scalar.  nsum must be
+    pre-scaled by alpha/p; c is the collapsed gradient weight alpha."""
+    use_kernel, interpret = _resolve_impl(impl)
+    if use_kernel:
+        out = K.sync_step(x[None, :], a, x_star[None, :], nsum[None, :],
+                          jnp.reshape(c, (1, 1)), block_d=block_d,
+                          interpret=interpret)
+    else:
+        out = R.sync_step_ref(x[None, :], a, x_star[None, :], nsum[None, :],
+                              c)
+    return out[0]

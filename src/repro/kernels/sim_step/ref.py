@@ -1,0 +1,32 @@
+"""Pure-jnp oracle for the fused sim_step kernels.
+
+Same math as `kernel.py` without the Pallas interpreter: the row-major
+gradient matmul ``(V - x*) @ A + noise``, the stacked delivery matmul
+``U @ G`` and the apply, in one traceable function.  Off-TPU this IS the
+fast path the simulator engine dispatches to (XLA fuses it well); the
+parity suite checks the Pallas kernel (interpret mode) against it
+element-for-element.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def delivery_step_ref(v, x, a, x_star, noise, u, defer=None):
+    """v (p, d); x (1, d); a (d, d); x_star (1, d); noise (p, d);
+    u (m, p) scale-folded delivery tensor; defer (p, d) or None.
+    Returns (x', v') or (x', v', defer')."""
+    p = v.shape[0]
+    g = (v - x_star) @ a + noise
+    p_rows = u @ g
+    x_new = x - p_rows[0:1]
+    v_new = v - p_rows[1:1 + p]
+    if defer is None:
+        return x_new, v_new
+    return x_new, v_new - defer, p_rows[1 + p:1 + 2 * p]
+
+
+def sync_step_ref(x, a, x_star, nsum, c):
+    """x, x_star, nsum (1, d); a (d, d); c scalar (or (1, 1)).  The p views
+    equal x exactly under sync, so one matvec carries the whole step."""
+    return x - jnp.reshape(c, ()) * ((x - x_star) @ a) - nsum

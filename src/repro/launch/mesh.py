@@ -5,22 +5,24 @@ touches jax device state. Single pod: (data=16, model=16) = 256 chips.
 Multi-pod: (pod=2, data=16, model=16) = 512 chips; the ``pod`` axis is an
 outer data-parallel axis whose gradient traffic crosses the (slow) inter-pod
 links — exactly where the paper's communication-reduction matters most.
+
+Mesh creation routes through `repro.jax_compat` so the ``AxisType`` /
+``axis_types=`` API drift across jax versions is absorbed in one place.
 """
 from __future__ import annotations
 
 import jax
-from jax.sharding import AxisType
+
+from repro.jax_compat import make_mesh
 
 
 def make_production_mesh(*, multi_pod: bool = False):
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes,
-                         axis_types=(AxisType.Auto,) * len(axes))
+    return make_mesh(shape, axes)
 
 
 def make_host_mesh(model: int = 1):
     """Degenerate mesh for CPU-scale smoke runs (1 device)."""
     n = len(jax.devices())
-    return jax.make_mesh((n // model, model), ("data", "model"),
-                         axis_types=(AxisType.Auto, AxisType.Auto))
+    return make_mesh((n // model, model), ("data", "model"))

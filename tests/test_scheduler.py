@@ -61,9 +61,10 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
     import numpy as np
     from jax.sharding import PartitionSpec as P
     from repro.core.scheduler import SyncConfig, init_sync_state, sync_gradients
+    # mesh/shard_map API drift (AxisType, check_vma) is absorbed by the shim
+    from repro.jax_compat import make_mesh, shard_map
 
-    mesh = jax.make_mesh((8,), ("data",),
-                         axis_types=(jax.sharding.AxisType.Auto,))
+    mesh = make_mesh((8,), ("data",))
     P_ = P
     key = jax.random.PRNGKey(0)
     # per-shard gradients: shard i holds g_i; we stack on a leading axis and
@@ -85,18 +86,18 @@ _MULTIDEV_SCRIPT = textwrap.dedent("""
                                                      specs=specs)
             return synced, synced2, metrics
 
-        fn = jax.shard_map(local, mesh=mesh,
-                           in_specs=(jax.tree.map(lambda _: P("data"), G),),
-                           out_specs=(P(), P(), P()),
-                           axis_names={"data"}, check_vma=False)
+        fn = shard_map(local, mesh,
+                       (jax.tree.map(lambda _: P("data"), G),),
+                       (P(), P(), P()), check=False)
         return fn(G)
 
     mean = jax.tree.map(lambda x: jnp.mean(x, axis=0), G)
 
-    # exact == plain mean
+    # exact == plain mean (atol: pmean reduction order differs per backend)
     s1, s2, _ = run("exact")
     for a, b in zip(jax.tree.leaves(s1), jax.tree.leaves(mean)):
-        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5)
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=1e-5,
+                                   atol=1e-7)
     print("exact OK")
 
     # topk_ef: two rounds of payload+carry must approach the mean; the

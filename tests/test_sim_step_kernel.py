@@ -1,0 +1,213 @@
+"""Fused simulator-step path: kernel / engine / grid parity.
+
+Three layers of checks:
+  * op level — the Pallas kernels (interpret mode on CPU) against the fused
+    jnp oracle in `kernels/sim_step/ref.py`, element-for-element,
+  * engine level — ``simulate(..., fused=True)`` against the unfused scan
+    step AND the numpy oracle, step-for-step, for every fused kind,
+  * grid level — ``simulate_grid`` against a Python loop of
+    ``simulate_sweep`` calls (same trajectories, one compiled program).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core.problems import MLPClassification, Quadratic
+from repro.core.sim import Relaxation, simulate, simulate_grid, simulate_sweep
+from repro.kernels import sim_step
+from repro.kernels.sim_step import kernel as K
+from repro.kernels.sim_step import ref as R
+
+P, T, ALPHA, DIM = 8, 60, 0.02, 32
+
+FUSED_CASES = [
+    ("sync", {}),
+    ("crash", dict(f=3)),
+    ("crash_subst", dict(f=3)),
+    ("elastic_variance", dict(drop_prob=0.3)),
+]
+
+
+@pytest.fixture(scope="module")
+def prob():
+    return Quadratic(dim=DIM, cond=8.0, sigma=1.0, seed=0)
+
+
+@pytest.fixture(scope="module")
+def x0():
+    return np.ones(DIM, np.float32) * 2.0
+
+
+# ---------------------------------------------------------------------------
+# op level: Pallas kernel (interpret) vs fused jnp oracle
+# ---------------------------------------------------------------------------
+
+def _rand(rng, *shape):
+    return jnp.asarray(rng.normal(size=shape), jnp.float32)
+
+
+@pytest.mark.parametrize("d,block_d", [(256, 128), (100, 256)],
+                         ids=["tiled", "odd-d-single-block"])
+def test_delivery_kernel_matches_ref(d, block_d):
+    rng = np.random.default_rng(0)
+    p = 8
+    v, x, xs = _rand(rng, p, d), _rand(rng, 1, d), _rand(rng, 1, d)
+    a, n = _rand(rng, d, d), _rand(rng, p, d)
+    u = _rand(rng, 1 + p, p)
+    got = K.delivery_step(v, x, a, xs, n, u, block_d=block_d, interpret=True)
+    want = R.delivery_step_ref(v, x, a, xs, n, u)
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_delivery_kernel_defer_matches_ref():
+    rng = np.random.default_rng(1)
+    p, d = 8, 256
+    v, x, xs = _rand(rng, p, d), _rand(rng, 1, d), _rand(rng, 1, d)
+    a, n, defer = _rand(rng, d, d), _rand(rng, p, d), _rand(rng, p, d)
+    u = _rand(rng, 1 + 2 * p, p)
+    got = K.delivery_step(v, x, a, xs, n, u, defer, block_d=128,
+                          has_defer=True, interpret=True)
+    want = R.delivery_step_ref(v, x, a, xs, n, u, defer)
+    assert len(got) == len(want) == 3
+    for g, w in zip(got, want):
+        np.testing.assert_allclose(np.asarray(g), np.asarray(w),
+                                   rtol=1e-5, atol=1e-4)
+
+
+def test_sync_kernel_matches_ref():
+    rng = np.random.default_rng(2)
+    d = 256
+    x, xs, nsum = _rand(rng, 1, d), _rand(rng, 1, d), _rand(rng, 1, d)
+    a = _rand(rng, d, d)
+    got = K.sync_step(x, a, xs, nsum, jnp.full((1, 1), 0.03, jnp.float32),
+                      block_d=128, interpret=True)
+    want = R.sync_step_ref(x, a, xs, nsum, jnp.float32(0.03))
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# engine level: fused vs unfused scan vs numpy oracle, step-for-step
+# ---------------------------------------------------------------------------
+
+def _assert_parity(a, b):
+    np.testing.assert_allclose(a.gap2_over_alpha2, b.gap2_over_alpha2,
+                               rtol=2e-3, atol=2e-3)
+    np.testing.assert_allclose(a.losses, b.losses, rtol=2e-3, atol=2e-4)
+    np.testing.assert_allclose(a.x_final, b.x_final, rtol=2e-3, atol=2e-4)
+
+
+@pytest.mark.parametrize("kind,kw", FUSED_CASES,
+                         ids=[c[0] for c in FUSED_CASES])
+def test_fused_matches_unfused_and_oracle(prob, x0, kind, kw):
+    relax = Relaxation(kind, **kw)
+    assert sim_step.supports_fused(prob, relax)
+    fused = simulate(prob, relax, P, ALPHA, T, seed=3, x0=x0, fused=True)
+    unfused = simulate(prob, relax, P, ALPHA, T, seed=3, x0=x0, fused=False)
+    oracle = simulate(prob, relax, P, ALPHA, T, seed=3, x0=x0, engine="ref")
+    _assert_parity(fused, unfused)
+    _assert_parity(fused, oracle)
+
+
+def test_auto_dispatch(prob, x0):
+    """auto == fused where supported and d is in the winning regime;
+    unsupported (problem, kind) pairs and small d fall back to the unfused
+    step instead of erroring."""
+    relax = Relaxation("crash_subst", f=3)
+    big = Quadratic(dim=128, cond=8.0, sigma=1.0, seed=0)
+    auto = simulate(big, relax, P, ALPHA, T, seed=3, fused="auto")
+    fused = simulate(big, relax, P, ALPHA, T, seed=3, fused=True)
+    np.testing.assert_array_equal(auto.x_final, fused.x_final)
+
+    # below AUTO_MIN_DIM the auto path is the (bit-identical) unfused step
+    auto_small = simulate(prob, relax, P, ALPHA, T, seed=3, x0=x0,
+                          fused="auto")
+    unfused_small = simulate(prob, relax, P, ALPHA, T, seed=3, x0=x0,
+                             fused=False)
+    np.testing.assert_array_equal(auto_small.x_final, unfused_small.x_final)
+
+    mlp = MLPClassification(seed=0)
+    assert not sim_step.supports_fused(mlp, relax)
+    res = simulate(mlp, relax, 4, 0.1, 20, seed=2,
+                   x0=np.asarray(mlp.init(seed=1)), fused="auto")
+    assert np.isfinite(res.losses).all()
+    with pytest.raises(ValueError):
+        simulate(mlp, relax, 4, 0.1, 20, seed=2, fused=True)
+    with pytest.raises(ValueError):
+        simulate(prob, Relaxation("async", tau_max=2), P, ALPHA, T,
+                 fused=True)
+
+
+def test_fused_sweep_matches_single_runs(prob, x0):
+    relax = Relaxation("elastic_variance", drop_prob=0.3)
+    seeds = [0, 5]
+    batch = simulate_sweep(prob, relax, P, ALPHA, T, seeds, x0=x0,
+                           fused=True)
+    for s, res in zip(seeds, batch):
+        single = simulate(prob, relax, P, ALPHA, T, seed=s, x0=x0,
+                          fused=True)
+        np.testing.assert_allclose(res.x_final, single.x_final,
+                                   rtol=1e-5, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# grid level: one compiled program == the Python loop it replaces
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fused", [True, False], ids=["fused", "unfused"])
+def test_grid_matches_looped_sweep(x0, fused):
+    """Multi-problem grid: same-shape (p, d) instances stacked on a batch
+    axis reproduce per-problem looped sweeps exactly — with the fused step
+    (one program for the whole grid) and with the unfused oracle step."""
+    probs = [Quadratic(dim=DIM, cond=8.0, sigma=1.0, seed=s) for s in (0, 1)]
+    relaxes = [Relaxation("crash_subst", f=3),
+               Relaxation("elastic_variance", drop_prob=0.3),
+               Relaxation("elastic_variance", drop_prob=0.1)]
+    alphas = [0.01, 0.02]
+    seeds = [0, 1]
+    grid = simulate_grid(probs, relaxes, P, alphas, T, seeds=seeds, x0=x0,
+                         fused=fused)
+    assert len(grid) == len(probs) * len(relaxes) * len(alphas) * len(seeds)
+    for ip, prob_i in enumerate(probs):
+        for ir, relax in enumerate(relaxes):
+            for ia, alpha in enumerate(alphas):
+                swept = simulate_sweep(prob_i, relax, P, alpha, T, seeds,
+                                       x0=x0, fused=fused)
+                for s, want in zip(seeds, swept):
+                    got = grid[(ip, ir, P, ia, s)]
+                    np.testing.assert_allclose(
+                        got.gap2_over_alpha2, want.gap2_over_alpha2,
+                        rtol=1e-4, atol=1e-4)
+                    np.testing.assert_allclose(got.losses, want.losses,
+                                               rtol=1e-4, atol=1e-5)
+                    np.testing.assert_allclose(got.x_final, want.x_final,
+                                               rtol=1e-4, atol=1e-5)
+
+
+def test_grid_matches_looped_sweep_unfused_knobs(x0):
+    """A beta sweep over the (unfused) norm-bounded scheduler shares ONE
+    compiled program — the float knob is traced, not baked."""
+    fresh = Quadratic(dim=DIM, cond=8.0, sigma=1.0, seed=0)
+    relaxes = [Relaxation("elastic_norm", beta=b) for b in (0.2, 0.8)]
+    grid = simulate_grid(fresh, relaxes, P, ALPHA, T, seeds=(0,), x0=x0)
+    for ir, relax in enumerate(relaxes):
+        want = simulate(fresh, relax, P, ALPHA, T, seed=0, x0=x0)
+        got = grid[(0, ir, P, 0, 0)]
+        np.testing.assert_allclose(got.x_final, want.x_final,
+                                   rtol=1e-4, atol=1e-5)
+    # both betas hit the same cached vmapped program (fresh problem: the
+    # cache holds exactly the one grid program this call compiled)
+    cache_keys = [k for k in getattr(fresh, "_sim_engine_cache")
+                  if k and k[0] == "grid"]
+    assert len(cache_keys) == 1
+
+
+def test_grid_select(prob, x0):
+    relaxes = [Relaxation("sync"), Relaxation("crash", f=2)]
+    grid = simulate_grid(prob, relaxes, P, ALPHA, T, seeds=(0, 1), x0=x0)
+    assert len(grid.select(i_relax=0)) == 2
+    assert len(grid.select(seed=1)) == 2
+    assert len(grid.select()) == 4
