@@ -3,8 +3,11 @@
 1. Simulate distributed SGD under several consistency relaxations (exact
    semantics of the paper's Algorithms 1-6), measure the elastic-consistency
    constant B, and check it against Table 1's theory bound.
-2. Train a small transformer with the production elastic scheduler and watch
-   the on-device consistency gap.
+2. Take one training step through the `repro.dist` API directly — the same
+   ``make_train_step`` every architecture's smoke test runs.
+3. Train a small transformer end-to-end with the production elastic
+   scheduler (``repro.launch.train``) and watch the on-device consistency
+   gap ||x - v||^2/alpha^2 tracked next to the loss.
 
 Run:  PYTHONPATH=src python examples/quickstart.py
 """
@@ -71,13 +74,27 @@ def main():
           f"one program; B_hat range "
           f"[{min(b_hats):.2f}, {max(b_hats):.2f}]\n")
 
-    # --- 2. the production scheduler at smoke scale -------------------
-    import importlib.util
-    if importlib.util.find_spec("repro.dist") is None:
-        print("repro.dist is not available in this snapshot — skipping the "
-              "smoke-scale\ntraining run (see examples/elastic_training.py "
-              "for the full comparison).")
-        return
+    # --- 2. one train step through the repro.dist API ------------------
+    import jax
+    from repro.configs import get_config
+    from repro.data.pipeline import synthetic_batch
+    from repro.dist.train import loss_fn, make_train_step
+    from repro.models import transformer as TF
+    from repro.models.params import init_params
+    from repro.optim import momentum
+
+    cfg = get_config("qwen3-1.7b-smoke")
+    flags = TF.RunFlags(remat=False)
+    params = init_params(TF.model_defs(cfg), jax.random.PRNGKey(0))
+    opt = momentum(3e-3, 0.9)
+    batch = synthetic_batch(cfg, 4, 32, seed=0)
+    step = jax.jit(make_train_step(cfg, opt, flags))
+    params2, _, metrics = step(params, opt.init(params), batch)
+    print(f"one make_train_step step on {cfg.name}: "
+          f"loss {float(metrics['loss']):.4f} -> "
+          f"{float(loss_fn(cfg, params2, batch, flags)[0]):.4f}\n")
+
+    # --- 3. the production scheduler at smoke scale -------------------
     print("Training a smoke-scale qwen3 with the elastic scheduler")
     print("(see examples/elastic_training.py for the full comparison):")
     import subprocess

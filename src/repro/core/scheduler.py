@@ -129,13 +129,11 @@ def _leaf_topk_sync(g, err, spec, ratio, axes):
     g_vals = g_vals.reshape(p, m, k)
     g_idx = g_idx.reshape(p, m, k)
 
-    def add_one(dense, pv):
-        pvv, pii = pv
-        return dense.at[jnp.arange(m)[:, None], pii].add(
-            pvv.astype(jnp.float32)), None
-
-    dense, _ = jax.lax.scan(add_one, jnp.zeros((m, r), jnp.float32),
-                            (g_vals, g_idx))
+    # one batched scatter-add over all p payloads (duplicate (row, idx)
+    # targets accumulate); loop-free so the elastic step can run inside a
+    # partial-auto shard_map without a while op in the HLO
+    dense = jnp.zeros((m, r), jnp.float32).at[
+        jnp.arange(m)[None, :, None], g_idx].add(g_vals.astype(jnp.float32))
     synced = _from_rows(dense / p, perm, tshape)
     own_dense = jnp.zeros((m, r), jnp.float32).at[
         jnp.arange(m)[:, None], idx].add(vals.astype(jnp.float32))

@@ -1,0 +1,20 @@
+"""Distributed training/serving subsystem.
+
+``repro.dist`` is the layer between the pure model code (`repro.models`),
+the gradient-sync strategies (`repro.core.scheduler`) and the launchers
+(`repro.launch`):
+
+  * :mod:`repro.dist.sharding` — mesh-axis bookkeeping and the
+    ``PartitionSpec``/``NamedSharding`` builders for params, optimizer state,
+    batches, serve caches and activation constraint points,
+  * :mod:`repro.dist.train` — the train/serve step builders: ``loss_fn``,
+    ``make_train_step`` (plain GSPMD data parallel), ``make_elastic_train_step``
+    (manual data-axis collectives via ``shard_map`` so the paper's relaxed
+    sync strategies control exactly what crosses the wire), and
+    ``make_prefill_step`` / ``make_decode_step`` for serving.
+
+The module boundaries mirror the consumers: ``repro.launch.train`` /
+``dryrun`` / ``serve`` import from here and run unmodified at every scale
+from a 1-CPU smoke mesh to the 512-chip multi-pod dry-run mesh.
+"""
+from repro.dist import sharding, train  # noqa: F401

@@ -30,13 +30,35 @@ def make_mesh(shape, names):
     return jax.make_mesh(shape, names, **axis_types_kwargs(len(shape)))
 
 
-def shard_map(f, mesh, in_specs, out_specs, check: bool = False):
-    """Version-portable ``shard_map`` over all mesh axes.  ``check`` maps to
-    ``check_vma`` (new jax) / ``check_rep`` (old jax)."""
+def shard_map(f, mesh, in_specs, out_specs, check: bool = False,
+              auto: frozenset = frozenset()):
+    """Version-portable ``shard_map``.  ``check`` maps to ``check_vma``
+    (new jax) / ``check_rep`` (old jax).
+
+    ``auto`` names mesh axes left to the compiler (GSPMD) instead of being
+    manually mapped over — the trainer runs the data-parallel sync collectives
+    manually over the ``data``/``pod`` axes while tensor parallelism over
+    ``model`` stays automatic. Old jax exposes this as ``auto=``; newer jax
+    inverts it into ``axis_names=`` (the manual axes), so both spellings are
+    absorbed here.
+    """
+    import inspect
+
+    auto = frozenset(auto)
     sm = getattr(jax, "shard_map", None)
     if sm is not None:
-        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                  check_vma=check)
+        params = inspect.signature(sm).parameters
+        kw = {("check_vma" if "check_vma" in params else "check_rep"): check}
+        if auto:
+            if "auto" in params:
+                kw["auto"] = auto
+            elif "axis_names" in params:
+                kw["axis_names"] = set(mesh.axis_names) - auto
+            else:  # pragma: no cover - future drift
+                raise TypeError("this jax.shard_map has no auto/axis_names")
+        return sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)
     from jax.experimental.shard_map import shard_map as _sm
-    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-               check_rep=check)
+    kw = {"check_rep": check}
+    if auto:
+        kw["auto"] = auto
+    return _sm(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, **kw)

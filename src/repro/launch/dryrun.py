@@ -181,19 +181,12 @@ def lower_train(cfg: ArchConfig, mesh, shape: InputShape,
         strategy=sync, axis_names=SH.data_axes(mesh),
         wire_dtype=WIRE_DTYPE,
         gate="static" if sync == "elastic" else "norm")
-    from repro.core.scheduler import init_sync_state
-    ab_sync = jax.eval_shape(
-        lambda g: init_sync_state(scfg, g), ab_params)
-    sspecs = jax.tree.map(
-        lambda _: P(), ab_sync,
-        is_leaf=lambda x: isinstance(x, jax.ShapeDtypeStruct))
-    # sync-state leaves mirroring params keep the params' model sharding
-    def sync_specs(state_tree):
-        out = {}
-        for k, v in state_tree.items():
-            out[k] = pspecs if k in ("err", "residual") else P()
-        return out
-    sspecs = sync_specs(ab_sync)
+    from repro.dist.train import init_dist_sync_state
+    ab_sync = jax.eval_shape(lambda: init_dist_sync_state(scfg, mesh,
+                                                          ab_params))
+    # per-worker entries (EF error / elastic residual) shard their leading
+    # worker dim over the data axes and keep the params' model sharding
+    sspecs = SH.sync_state_specs(ab_sync, pspecs, mesh)
     step = make_elastic_train_step(cfg, opt, mesh, scfg, pspecs, flags,
                                    static_phase=static_phase)
     jitted = jax.jit(
@@ -275,9 +268,18 @@ def reduced_depths(cfg: ArchConfig) -> tuple[int, int]:
     return 0, 1
 
 
+def _cost_analysis(compiled) -> dict:
+    """``compiled.cost_analysis()`` normalized across jax versions (older
+    releases return a one-element list of dicts, newer a plain dict)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
 def _costs_of(lowered) -> dict:
     compiled = lowered.compile()
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     coll = collective_bytes(compiled.as_text())
     return {
         "flops": float(ca.get("flops", 0.0)),
@@ -408,7 +410,7 @@ def run_one(arch: str, shape_name: str, multi_pod: bool, sync: str = "exact",
              + ma.temp_size_in_bytes - ma.alias_size_in_bytes) / 2**30, 3),
     }
     print(f"  memory_analysis: {ma}")
-    ca = compiled.cost_analysis() or {}
+    ca = _cost_analysis(compiled)
     rec["cost_analysis_raw"] = {
         "flops": float(ca.get("flops", 0.0)),
         "bytes": float(ca.get("bytes accessed", 0.0)),

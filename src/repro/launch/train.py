@@ -49,10 +49,11 @@ def main():
 
     from repro.checkpoint import save_checkpoint, latest_step, load_checkpoint
     from repro.configs import get_config
-    from repro.core.scheduler import SyncConfig, init_sync_state
+    from repro.core.scheduler import SyncConfig
     from repro.data.pipeline import SyntheticLMDataset
     from repro.dist import sharding as SH
-    from repro.dist.train import make_elastic_train_step, make_train_step
+    from repro.dist.train import (init_dist_sync_state,
+                                  make_elastic_train_step, make_train_step)
     from repro.launch.mesh import make_host_mesh
     from repro.models import transformer as TF
     from repro.models.params import init_params, param_specs
@@ -90,10 +91,7 @@ def main():
             topk_ratio=args.topk_ratio, beta=args.beta,
             budget_b=args.budget_b,
             gate="norm")
-        with mesh:
-            sync_state = init_sync_state(
-                scfg, jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32),
-                                   params))
+        sync_state = init_dist_sync_state(scfg, mesh, params)
         estep = make_elastic_train_step(cfg, opt, mesh, scfg, pspecs, flags)
         jstep = jax.jit(estep, donate_argnums=(0, 1, 2))
 

@@ -43,7 +43,11 @@ def route(router_logits: jax.Array, k: int, cap: int):
     """
     g, t, e = router_logits.shape
     probs = jax.nn.softmax(router_logits.astype(jnp.float32), axis=-1)
-    topk_probs, topk_idx = jax.lax.top_k(probs, k)            # (G, T, k)
+    # sort-based top-k (same tie-breaking as lax.top_k: lowest index wins);
+    # the TopK custom-call trips the jax-0.4.x SPMD partitioner inside the
+    # elastic trainer's partial-auto shard_map, sort partitions fine
+    topk_idx = jnp.argsort(-probs, axis=-1)[..., :k]          # (G, T, k)
+    topk_probs = jnp.take_along_axis(probs, topk_idx, axis=-1)
     topk_probs = topk_probs / jnp.sum(topk_probs, axis=-1, keepdims=True)
 
     # load-balancing auxiliary loss (Switch/GShard form)

@@ -1,4 +1,4 @@
-"""Scan wrappers with a cost-lowering unroll switch.
+"""Scan wrappers with unroll switches.
 
 XLA's ``cost_analysis`` counts a ``while`` body ONCE regardless of trip
 count, which would silently under-report FLOPs/bytes/collectives for every
@@ -7,12 +7,24 @@ For the roofline cost lowerings the dry-run flips ``set_cost_unroll(True)``
 so every model scan fully unrolls (reduced-depth configs keep this tractable)
 and the counts are exact; production/compile-proof lowerings keep compact
 ``while`` loops.
+
+:func:`unrolled` is a second, scoped unroll switch for a different reason:
+on the jax 0.4.x series, a ``while`` loop (``lax.scan``/``lax.map``) inside
+a *partial-auto* ``shard_map`` (manual data axes + GSPMD-managed ``model``
+axis) trips a fatal check in XLA's SPMD partitioner
+(``hlo_sharding_util.cc: sharding.IsManualSubgroup()``). The elastic train
+step wraps its body in ``unrolled(...)`` whenever auto axes are present so
+tensor-parallel lowerings compile; meshes without a >1 ``model`` axis (all
+CPU smoke/system tests) keep the compact scan.
 """
 from __future__ import annotations
+
+import contextlib
 
 import jax
 
 _COST_UNROLL = False
+_FORCE_UNROLL = 0  # nesting depth of `unrolled(True)` contexts
 
 
 def set_cost_unroll(value: bool) -> None:
@@ -24,14 +36,31 @@ def cost_unroll_enabled() -> bool:
     return _COST_UNROLL
 
 
+@contextlib.contextmanager
+def unrolled(enable: bool = True):
+    """Scoped unroll of every model scan traced inside the context."""
+    global _FORCE_UNROLL
+    if enable:
+        _FORCE_UNROLL += 1
+    try:
+        yield
+    finally:
+        if enable:
+            _FORCE_UNROLL -= 1
+
+
+def _unroll_now() -> bool:
+    return _COST_UNROLL or _FORCE_UNROLL > 0
+
+
 def scan(body, carry, xs, **kw):
-    if _COST_UNROLL:
+    if _unroll_now():
         kw = dict(kw, unroll=True)
     return jax.lax.scan(body, carry, xs, **kw)
 
 
 def lmap(fn, xs):
-    if _COST_UNROLL:
+    if _unroll_now():
         import jax.numpy as jnp
         n = jax.tree.leaves(xs)[0].shape[0]
         ys = [fn(jax.tree.map(lambda a: a[i], xs)) for i in range(n)]
