@@ -1,0 +1,165 @@
+"""EF-may-not-help under emulated asynchrony, at real-model scale.
+
+The paper's headline empirical observation is that error feedback — which
+provably and practically rescues *synchronous* sparsified SGD — may stop
+helping once gradients are also stale.  `repro.dist.async_engine` makes
+that testable on the real models: this bench trains a small dense config
+on a forced 2-device host mesh under the bounded-staleness engine with
+top-k sparsification, EF on vs off, for tau_max in {0, 4, 16}, and emits
+one accept row per tau comparing final losses.
+
+Also emitted:
+  * ``accept/async_tau0_parity`` — the tau_max=0 async path vs the
+    synchronous `exact` strategy (`make_elastic_train_step`): max abs loss
+    difference over the run must be <= 1e-5 (it is bitwise-0 in practice —
+    the delay ring at capacity 1 is deposit-then-take of the same slot),
+  * ``async/steps_per_s`` vs ``async/exact_steps_per_s`` — the emulated
+    asynchrony must not give up the synchronous hot-path speed.
+
+The training loops run in ONE subprocess (XLA_FLAGS must force the
+2-device host platform before jax initializes, which cannot be done from
+inside the already-initialized bench harness process); the child prints
+``BENCHROW|name|us|derived`` lines that the parent converts to rows.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import row
+
+SMOKE = bool(os.environ.get("BENCH_SIM_SMOKE"))
+STEPS = 12 if SMOKE else 40
+TAUS = (0, 4, 16)
+
+
+def _child() -> None:
+    import jax
+    import numpy as np
+    from jax.sharding import NamedSharding
+
+    from repro.configs import get_config
+    from repro.core.scheduler import SyncConfig
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.dist import sharding as SH
+    from repro.dist.async_engine import (AsyncConfig, init_async_state,
+                                         make_async_train_step)
+    from repro.dist.train import init_dist_sync_state, make_elastic_train_step
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as TF
+    from repro.models.params import init_params, param_specs
+    from repro.optim import momentum
+
+    cfg = get_config("qwen3-1.7b").reduced()          # small dense config
+    mesh = make_host_mesh()
+    assert SH.axis_sizes(mesh)["data"] == 2, dict(mesh.shape)
+    flags = TF.RunFlags(remat=False)
+    defs = TF.model_defs(cfg)
+    pspecs = param_specs(defs, SH.axis_sizes(mesh))
+    params0 = init_params(defs, jax.random.PRNGKey(0))
+    opt = momentum(0.02, 0.9)
+    data = SyntheticLMDataset(cfg.vocab_size, 32, 8, seed=0)
+
+    def shard_batch(b):
+        return {k: jax.device_put(
+                    v, NamedSharding(mesh, SH.batch_spec(mesh, v.shape[0])))
+                for k, v in b.items()}
+
+    batches = [shard_batch(data.batch(t)) for t in range(STEPS)]
+
+    def train(step_fn, state):
+        params, opt_state = params0, opt.init(params0)
+        # one discarded step so the steps/s rows time the steady state,
+        # not the two programs' (different) compile times
+        jax.block_until_ready(step_fn(params, opt_state, state, batches[0]))
+        losses = []
+        t0 = time.perf_counter()
+        for b in batches:
+            params, opt_state, state, metrics = step_fn(
+                params, opt_state, state, b)
+            losses.append(float(metrics["loss"]))
+        dt = time.perf_counter() - t0
+        return losses, float(np.mean(losses[-min(10, STEPS):])), dt
+
+    def emit(name, us, derived):
+        print(f"BENCHROW|{name}|{us:.1f}|{derived}", flush=True)
+
+    # synchronous exact baseline (shard_map pmean — the apples-to-apples
+    # reference: identical program structure, delay rings removed)
+    scfg = SyncConfig(strategy="exact", axis_names=("data",))
+    estep = jax.jit(make_elastic_train_step(cfg, opt, mesh, scfg, pspecs,
+                                            flags))
+    exact_losses, exact_final, exact_dt = train(
+        lambda p, o, s, b: estep(p, o, s, b),
+        init_dist_sync_state(scfg, mesh, params0))
+    emit("async/exact_steps_per_s", exact_dt / STEPS * 1e6,
+         f"{STEPS / exact_dt:.1f} steps/s (sync exact baseline)")
+
+    def async_run(tau_max, compressor, ef, seed=0):
+        # track_gap off: the steps/s rows compare the engine's hot path
+        # (same all-reduce volume as sync) against the exact baseline
+        acfg = AsyncConfig(tau_max=tau_max, schedule="uniform",
+                           compressor=compressor, error_feedback=ef,
+                           topk_ratio=1 / 8, horizon=STEPS, seed=seed,
+                           track_gap=False)
+        astep = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
+                                              flags))
+        return train(astep, init_async_state(acfg, mesh, params0))
+
+    # tau_max=0 parity: bounded-delay delivery with a capacity-1 ring IS
+    # the synchronous step
+    a_losses, _, a_dt = async_run(0, "none", True)
+    diff = max(abs(a - b) for a, b in zip(exact_losses, a_losses))
+    status = "OK" if diff <= 1e-5 else "FAIL"
+    emit("accept/async_tau0_parity", a_dt / STEPS * 1e6,
+         f"max|dloss|={diff:.2e} <=1e-5 vs sync exact: {status}")
+    emit("async/steps_per_s", a_dt / STEPS * 1e6,
+         f"{STEPS / a_dt:.1f} steps/s (tau_max=0; exact base "
+         f"{STEPS / exact_dt:.1f})")
+
+    # EF vs no-EF under growing staleness (top-k sparsification)
+    for tau in TAUS:
+        # train() already excludes compile (warmup step), so time the rows
+        # from its returned dts, not an outer wall clock around jit builds
+        _, f_ef, dt_ef = async_run(tau, "topk", True)
+        _, f_noef, dt_noef = async_run(tau, "topk", False)
+        emit(f"accept/async_ef_tau{tau}", (dt_ef + dt_noef) * 1e6 / (2 * STEPS),
+             f"final loss ef={f_ef:.4f} noef={f_noef:.4f} "
+             f"ef-noef={f_ef - f_noef:+.4f} (tau_max={tau})")
+
+
+def run() -> list:
+    if "--child" in sys.argv:
+        raise RuntimeError("child mode is a __main__ entry, not a bench run")
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "")
+                        + " --xla_force_host_platform_device_count=2")
+    src = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "src"))
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_async_ef", "--child"],
+        env=env, capture_output=True, text=True, timeout=3600,
+        cwd=os.path.dirname(src))
+    if r.returncode != 0:
+        raise RuntimeError(
+            f"bench_async_ef child failed:\n{r.stdout[-2000:]}\n"
+            f"{r.stderr[-2000:]}")
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCHROW|"):
+            _, name, us, derived = line.split("|", 3)
+            rows.append(row(name, float(us), derived))
+    if not rows:
+        raise RuntimeError(f"no BENCHROW output:\n{r.stdout[-2000:]}")
+    return rows
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _child()
+    else:
+        from benchmarks.common import print_rows
+        print_rows(run())

@@ -22,6 +22,7 @@ MODULES = [
     "benchmarks.bench_lemma6_lower_bound",
     "benchmarks.bench_sim_engine",
     "benchmarks.bench_sim_step_kernel",
+    "benchmarks.bench_async_ef",
     "benchmarks.bench_kernels",
     "benchmarks.bench_roofline",
 ]

@@ -1,0 +1,189 @@
+"""Delay rings and delivery-schedule precompute, shared by both engines.
+
+This module owns the bounded-staleness *delivery* machinery that used to
+live inline in `repro.core.sim_engine` (the testbed simulator) and is now
+also consumed by `repro.dist.async_engine` (the real-model bounded-delay
+trainer):
+
+  * **Fixed-capacity delay rings** — the dynamic "pending messages" list of
+    an asynchronous run, made jit-able: a ring of ``capacity`` slots indexed
+    by ``step % capacity``.  A message produced at step ``t`` with delay
+    ``d < capacity`` is deposited into slot ``(t + d) % capacity`` and taken
+    (and the slot zeroed) at step ``t + d`` — every deposit is consumed
+    exactly once, which is what makes gradient mass conservation provable
+    (see ``tests/test_delivery.py``).  Capacity is bounded by the relaxation
+    itself: ``tau_max + 1`` for bounded-delay async, 3 for the omission
+    model (delivery in {t+1, t+2}).
+
+  * **Per-worker staleness schedules** — ``make_tau_schedule`` pre-draws the
+    oblivious-adversary delay table ``tau(t, worker)`` for the real-model
+    engine (`repro.dist.async_engine`): at step ``t`` worker ``w``'s
+    gradient is delivered at ``t + tau(t, w)``, with ``0 <= tau <= tau_max``
+    (or :data:`DROPPED` for crashed workers).  Like the simulator schedules
+    in `sim_types`, the table is drawn up-front from a dedicated numpy
+    stream that never sees a gradient.
+
+  * **Whole-run delivery tensors** — :func:`delivery_tensors` builds the
+    fused simulator step's (T, m, p) delivery weights in one vectorized
+    pass (moved here from ``kernels/sim_step/ops.py``; re-exported there).
+    The tensors are schedule-determined, never iterate-dependent, and obey
+    per-kind conservation laws: ``crash_subst`` rows of alive receivers sum
+    to the number of globally-received gradients (substitution preserves
+    mass), ``elastic_variance`` view rows always sum to exactly ``p`` and
+    defer rows to exactly ``0`` (deferral is mass-neutral).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+#: Sentinel in a tau schedule: the worker is crashed at this step — its
+#: gradient is never delivered (the engine masks the deposit to zero).
+DROPPED = -1
+
+#: Named staleness schedules understood by :func:`make_tau_schedule`.
+TAU_SCHEDULES = ("constant", "uniform", "roundrobin", "straggler", "crash")
+
+
+# ---------------------------------------------------------------------------
+# fixed-capacity delay rings (functional; usable inside scan/shard_map)
+# ---------------------------------------------------------------------------
+
+def ring_init(capacity: int, shape, dtype=jnp.float32) -> jax.Array:
+    """A zeroed delay ring of ``capacity`` slots of ``shape``."""
+    return jnp.zeros((capacity, *shape), dtype)
+
+
+def ring_deposit(ring: jax.Array, slot, value) -> jax.Array:
+    """Accumulate ``value`` into ``slot`` (several messages may land in the
+    same slot; delivery sums them)."""
+    return ring.at[slot].add(value)
+
+
+def ring_take(ring: jax.Array, slot):
+    """Consume ``slot``: returns ``(value, ring with the slot zeroed)``."""
+    return ring[slot], ring.at[slot].set(jnp.zeros((), ring.dtype))
+
+
+def tree_ring_init(capacity: int, tree, dtype=jnp.float32):
+    """Per-leaf :func:`ring_init` over a pytree of arrays/shapes."""
+    return jax.tree.map(
+        lambda a: ring_init(capacity, jnp.shape(a), dtype), tree)
+
+
+def tree_ring_deposit(rings, slot, tree):
+    return jax.tree.map(lambda r, v: ring_deposit(r, slot, v), rings, tree)
+
+
+def tree_ring_take(rings, slot):
+    taken = jax.tree.map(lambda r: r[slot], rings)
+    rings = jax.tree.map(
+        lambda r: r.at[slot].set(jnp.zeros((), r.dtype)), rings)
+    return taken, rings
+
+
+# ---------------------------------------------------------------------------
+# per-message delay masks (simulator async kind)
+# ---------------------------------------------------------------------------
+
+def delay_masks(delays, n_levels: int):
+    """One-hot delay masks: (T, p, p) int delays -> (n_levels, T, p, p) f32.
+
+    Level ``l`` is the messages delayed by exactly ``l`` steps.  For delays
+    in ``[0, n_levels)`` the levels partition the messages: summed over
+    levels every (t, i, j) entry is exactly 1 — each message is delivered
+    exactly once (the "row-stochastic where required" delivery invariant).
+    """
+    delays = jnp.asarray(delays)
+    return jnp.stack([(delays == l).astype(jnp.float32)
+                      for l in range(n_levels)])
+
+
+# ---------------------------------------------------------------------------
+# per-worker staleness schedules (real-model async engine)
+# ---------------------------------------------------------------------------
+
+def make_tau_schedule(schedule: str, p: int, T: int, tau_max: int,
+                      seed: int = 0) -> np.ndarray:
+    """Pre-draw the (T, p) int32 delay table ``tau(t, worker)``.
+
+    Worker ``w``'s step-``t`` gradient is delivered at ``t + tau(t, w)``;
+    every entry satisfies ``0 <= tau <= tau_max`` except :data:`DROPPED`
+    rows of crashed workers.  Schedules:
+
+      constant   : every message delayed by exactly ``tau_max``
+      uniform    : iid uniform over ``{0, ..., tau_max}``
+      roundrobin : ``(t + w) % (tau_max + 1)`` — deterministic rotation
+      straggler  : the last worker always at ``tau_max``, the rest at 0
+      crash      : uniform delays, but the last ``max(1, p // 4)`` workers
+                   crash at ``T // 2`` (DROPPED from then on)
+    """
+    if tau_max < 0:
+        raise ValueError(f"tau_max must be >= 0, got {tau_max}")
+    rng = np.random.default_rng(seed)
+    t_idx = np.arange(T)[:, None]
+    w_idx = np.arange(p)[None, :]
+    if schedule == "constant":
+        taus = np.full((T, p), tau_max)
+    elif schedule == "uniform":
+        taus = rng.integers(0, tau_max + 1, size=(T, p))
+    elif schedule == "roundrobin":
+        taus = (t_idx + w_idx) % (tau_max + 1)
+    elif schedule == "straggler":
+        taus = np.where(w_idx == p - 1, tau_max, 0) + 0 * t_idx
+    elif schedule == "crash":
+        taus = rng.integers(0, tau_max + 1, size=(T, p))
+        n_crash = max(1, p // 4) if p > 1 else 0
+        if n_crash:
+            taus[T // 2:, p - n_crash:] = DROPPED
+    else:
+        raise ValueError(
+            f"unknown tau schedule {schedule!r}; one of {TAU_SCHEDULES}")
+    return taus.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# whole-run delivery tensors (fused simulator step)
+# ---------------------------------------------------------------------------
+
+def delivery_tensors(kind: str, p: int, T: int, per_step: dict,
+                     per_run: dict, knobs: dict):
+    """Precompute the whole run's delivery tensors, vectorized over T.
+
+    Returns (U (T, m, p) float32, new_alive (T, p) bool or None).  Row 0 of
+    each U[t] weights the x update, rows 1..p the view updates (rows of
+    dead workers are zero, so no masking pass is needed downstream), rows
+    p+1..2p (``elastic_variance`` only) the deferred-correction update.
+    The step scale alpha/p is NOT folded in here — callers scale U once.
+    """
+    eye = jnp.eye(p, dtype=bool)
+    if kind in ("crash", "crash_subst"):
+        ts = jnp.arange(T)[:, None]
+        crash_step = per_run["crash_step"]               # (p,)
+        alive = crash_step[None, :] >= ts                # (T, p)
+        crashing = crash_step[None, :] == ts
+        new_alive = alive & ~crashing
+        base = alive[:, :, None] & alive[:, None, :]
+        heard = (per_run["hear_u"].T[None] < 0.5) \
+            & new_alive[:, :, None] & ~eye[None]
+        recv = jnp.where(crashing[:, None, :], heard, base)
+        in_recv = jnp.any(recv, axis=1)                  # (T, p)
+        w_v = recv.astype(jnp.float32) * new_alive[:, :, None]
+        if kind == "crash_subst":
+            missed = jnp.sum((~recv) & in_recv[:, None, :], axis=2)
+            w_v = w_v + eye[None] * (
+                missed.astype(jnp.float32) * new_alive)[:, :, None]
+        u = jnp.concatenate(
+            [in_recv.astype(jnp.float32)[:, None], w_v], axis=1)
+        return u, new_alive
+    if kind == "elastic_variance":
+        drop = (per_step["drop_u"] < knobs["drop_prob"]) & ~eye[None]
+        nd = jnp.sum(drop, axis=2).astype(jnp.float32)   # (T, p)
+        diag_nd = eye[None] * nd[:, :, None]
+        w_v = jnp.ones((T, p, p), jnp.float32) + diag_nd - drop
+        w_d = drop.astype(jnp.float32) - diag_nd
+        u = jnp.concatenate(
+            [jnp.ones((T, 1, p), jnp.float32), w_v, w_d], axis=1)
+        return u, None
+    raise ValueError(f"no delivery tensor for kind {kind!r}")

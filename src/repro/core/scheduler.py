@@ -110,6 +110,56 @@ def _from_rows(rows, perm, tshape):
     return jnp.transpose(gt, inv)
 
 
+def _topk_rows(rows, ratio):
+    """Row-wise magnitude top-k of (M, R) rows -> (signed values, indices),
+    k = max(1, round(R * ratio))."""
+    r = rows.shape[1]
+    k = max(1, int(round(r * ratio)))
+    _, idx = jax.lax.top_k(jnp.abs(rows), k)
+    return jnp.take_along_axis(rows, idx, axis=1), idx
+
+
+def _onebit_rows(rows):
+    """Row-wise sign/mean 1-bit stats of (M, R) rows (Eq. 30):
+    -> (pos mask (M, R), mean_pos (M,), mean_neg (M,))."""
+    r = rows.shape[1]
+    pos = rows >= 0
+    n_pos = jnp.maximum(jnp.sum(pos, axis=1), 1)
+    n_neg = jnp.maximum(r - jnp.sum(pos, axis=1), 1)
+    mean_pos = jnp.sum(jnp.where(pos, rows, 0.0), axis=1) / n_pos
+    mean_neg = jnp.sum(jnp.where(pos, 0.0, rows), axis=1) / n_neg
+    return pos, mean_pos, mean_neg
+
+
+def ef_compress_leaf(g, err, spec, method: str, topk_ratio: float = 1 / 64):
+    """One *local* compression round of a leaf (no collective): returns
+    ``(payload, new_err)`` where ``payload`` is the densified compressed
+    gradient Q(err + g) — what a worker would put on the wire — and
+    ``new_err = (err + g) - payload`` is the error-feedback residual.
+
+    Shared by the sync strategies below and by the bounded-staleness engine
+    (`repro.dist.async_engine`), which buffers payloads in per-worker delay
+    rings instead of synchronizing them immediately.  Pass a zero ``err``
+    and discard ``new_err`` for compression *without* error feedback.
+    """
+    w = err + g.astype(jnp.float32)
+    if w.size == 0:  # zero-layer dry-run variants
+        return w, w
+    rows, perm, tshape = _to_rows(w, spec)
+    m = rows.shape[0]
+    if method == "topk":
+        vals, idx = _topk_rows(rows, topk_ratio)
+        q = jnp.zeros_like(rows).at[
+            jnp.arange(m)[:, None], idx].add(vals)
+    elif method == "onebit":
+        pos, mean_pos, mean_neg = _onebit_rows(rows)
+        q = jnp.where(pos, mean_pos[:, None], mean_neg[:, None])
+    else:
+        raise ValueError(f"unknown compressor {method!r}")
+    payload = _from_rows(q, perm, tshape)
+    return payload, w - payload
+
+
 def _leaf_topk_sync(g, err, spec, ratio, axes):
     """Top-k + EF sync of one leaf. Returns (synced_mean, new_err)."""
     w = err + g.astype(jnp.float32)
@@ -117,9 +167,8 @@ def _leaf_topk_sync(g, err, spec, ratio, axes):
         return w, w
     rows, perm, tshape = _to_rows(w, spec)
     m, r = rows.shape
-    k = max(1, int(round(r * ratio)))
-    vals, idx = jax.lax.top_k(jnp.abs(rows), k)
-    vals = jnp.take_along_axis(rows, idx, axis=1)          # signed values
+    vals, idx = _topk_rows(rows, ratio)                    # signed values
+    k = vals.shape[1]
     # wire: all-gather compressed payloads over the data axes
     g_vals = jax.lax.all_gather(vals.astype(jnp.bfloat16), axis_name=axes,
                                 tiled=False)               # (p, M, k)
@@ -148,11 +197,7 @@ def _leaf_onebit_sync(g, err, spec, axes):
         return w, w
     rows, perm, tshape = _to_rows(w, spec)
     m, r = rows.shape
-    pos = rows >= 0
-    n_pos = jnp.maximum(jnp.sum(pos, axis=1), 1)
-    n_neg = jnp.maximum(r - jnp.sum(pos, axis=1), 1)
-    mean_pos = jnp.sum(jnp.where(pos, rows, 0.0), axis=1) / n_pos
-    mean_neg = jnp.sum(jnp.where(pos, 0.0, rows), axis=1) / n_neg
+    pos, mean_pos, mean_neg = _onebit_rows(rows)
     # wire: bool bitmap (1 byte/elt in HLO; the Pallas kernel packs 8x) +
     # two means per row
     g_pos = jax.lax.all_gather(pos, axis_name=axes)        # (p, M, R) i1

@@ -8,9 +8,11 @@ oracle:
 
   * the per-worker Python loops become (p, p) boolean delivery matrices
     contracted against the (p, d) gradient stack on the MXU,
-  * the dynamic ``pending`` list becomes fixed-capacity delay ring buffers —
-    capacity is bounded by the relaxation itself (``tau_max`` for async,
-    delay <= 2 for omission, 1 step for the elastic schedulers),
+  * the dynamic ``pending`` list becomes fixed-capacity delay ring buffers
+    (`repro.core.delivery` — shared with the real-model async engine in
+    `repro.dist.async_engine`) — capacity is bounded by the relaxation
+    itself (``tau_max`` for async, delay <= 2 for omission, 1 step for the
+    elastic schedulers),
   * EF compression routes through the fused Pallas ``topk_ef``/``onebit_ef``
     kernels (interpret mode off-TPU) via ``compression.ef_compress_rows``
     instead of a per-worker dense loop,
@@ -59,6 +61,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import compression as C
+from repro.core import delivery as DLV
 from repro.core.sim_types import (Relaxation, Schedule, SimResult,
                                   make_schedule, make_shared_memory_schedule)
 from repro.kernels import sim_step as SSK
@@ -211,25 +214,28 @@ def _build_run(problem, relax: Relaxation, p: int, T: int,
                 for e in (0, 1):                          # extra delay in {0, 1}
                     m = take & (step_s["extra_delay"] == e)
                     slot = (t + 1 + e) % om_ring
-                    ring = ring.at[slot].add(scale * (fmat(m) @ g))
-                    cnt = cnt.at[slot].add(jnp.sum(m))
-                v = v - ring[t % om_ring]
-                carry["ring"] = ring.at[t % om_ring].set(0.0)
-                carry["cnt"] = cnt.at[t % om_ring].set(0)
+                    ring = DLV.ring_deposit(ring, slot, scale * (fmat(m) @ g))
+                    cnt = DLV.ring_deposit(cnt, slot, jnp.sum(m))
+                delivered, ring = DLV.ring_take(ring, t % om_ring)
+                v = v - delivered
+                _, cnt = DLV.ring_take(cnt, t % om_ring)
+                carry["ring"], carry["cnt"] = ring, cnt
 
             elif kind == "async":
                 g = grads_at(v)
-                delays = step_s["delays"]
+                # one-hot per-delay delivery masks; level 0 is immediate
+                masks = DLV.delay_masks(step_s["delays"],
+                                        max(relax.tau_max, 1))
                 x = x - scale * jnp.sum(g, 0)
-                v = v - scale * (fmat(delays == 0) @ g)
+                v = v - scale * (masks[0] @ g)
                 if as_ring > 1:
                     ring = carry["ring"]
                     for dl in range(1, relax.tau_max):
-                        m = delays == dl
-                        ring = ring.at[(t + dl) % as_ring].add(
-                            scale * (fmat(m) @ g))
-                    v = v - ring[t % as_ring]
-                    carry["ring"] = ring.at[t % as_ring].set(0.0)
+                        ring = DLV.ring_deposit(ring, (t + dl) % as_ring,
+                                                scale * (masks[dl] @ g))
+                    delivered, ring = DLV.ring_take(ring, t % as_ring)
+                    v = v - delivered
+                    carry["ring"] = ring
 
             elif kind == "ef_comp":
                 g = grads_at(v)
@@ -288,10 +294,10 @@ def _build_run(problem, relax: Relaxation, p: int, T: int,
         if kind == "adversarial":
             carry["adv_dir"] = per_run["adv_dir"]
         if kind == "omission":
-            carry["ring"] = jnp.zeros((om_ring, p, d), jnp.float32)
-            carry["cnt"] = jnp.zeros(om_ring, jnp.int32)
+            carry["ring"] = DLV.ring_init(om_ring, (p, d))
+            carry["cnt"] = DLV.ring_init(om_ring, (), jnp.int32)
         if kind == "async" and as_ring > 1:
-            carry["ring"] = jnp.zeros((as_ring, p, d), jnp.float32)
+            carry["ring"] = DLV.ring_init(as_ring, (p, d))
         if kind == "ef_comp":
             carry["err"] = jnp.zeros((p, d), jnp.float32)
         if kind in ("elastic_norm", "elastic_variance"):
@@ -329,7 +335,7 @@ def _build_fused_run(problem, relax: Relaxation, p: int, T: int):
             _, xs = jax.lax.scan(step, x0, nsc)
             return xs, jnp.zeros(T, jnp.float32)
 
-        u, new_alive = SSK.delivery_tensors(kind, p, T, per_step, per_run,
+        u, new_alive = DLV.delivery_tensors(kind, p, T, per_step, per_run,
                                             knobs)
         u = scale * u
 

@@ -11,10 +11,15 @@ the gradient-sync strategies (`repro.core.scheduler`) and the launchers
     ``make_train_step`` (plain GSPMD data parallel), ``make_elastic_train_step``
     (manual data-axis collectives via ``shard_map`` so the paper's relaxed
     sync strategies control exactly what crosses the wire), and
-    ``make_prefill_step`` / ``make_decode_step`` for serving.
+    ``make_prefill_step`` / ``make_decode_step`` for serving,
+  * :mod:`repro.dist.async_engine` — ``make_async_train_step``: the
+    bounded-staleness (emulated-asynchrony) trainer — per-worker stale
+    gradient delay rings, crash/straggler tau schedules, top-k/one-bit
+    sparsification with or without error feedback — on the same
+    ``shard_map`` layout.
 
 The module boundaries mirror the consumers: ``repro.launch.train`` /
 ``dryrun`` / ``serve`` import from here and run unmodified at every scale
 from a 1-CPU smoke mesh to the 512-chip multi-pod dry-run mesh.
 """
-from repro.dist import sharding, train  # noqa: F401
+from repro.dist import async_engine, sharding, train  # noqa: F401

@@ -1,0 +1,224 @@
+"""Emulated-asynchrony trainer: bounded-staleness SGD on the real models.
+
+The simulator (`repro.core.sim_engine`) exercises the paper's asynchronous
+relaxations on the Quadratic testbed only; this module runs the same
+bounded-delay delivery semantics against the *real* architectures, at the
+same hot-path speed as the synchronous trainer (everything stays inside one
+jitted program — asynchrony is emulated with device-resident state, never
+with host-side threads).
+
+Semantics (the bounded-delay model of §B.4 / "The Convergence of SGD in
+Asynchronous Shared Memory", arXiv:1803.08841):
+
+  * every step, every worker (data shard) computes a gradient at the
+    *current* parameters and broadcasts it with a per-(step, worker) delay
+    ``tau(t, w)`` drawn from an oblivious-adversary schedule
+    (`repro.core.delivery.make_tau_schedule`), ``0 <= tau <= tau_max``;
+  * the shared model applies, at step ``t``, exactly the messages whose
+    delivery lands at ``t`` — a gradient produced at step ``s`` and applied
+    at step ``t = s + tau`` *is* a stale gradient: it was computed at the
+    ``tau``-steps-old iterate, which is what makes the emulation faithful
+    without keeping parameter history;
+  * delivery is realized with per-worker fixed-capacity delay rings
+    (`repro.core.delivery`, capacity ``tau_max + 1``) kept in the training
+    state with a leading worker dim sharded over the data axes — the same
+    truthful per-worker layout as ``init_dist_sync_state``'s EF residuals;
+  * gradients can be sparsified before "transmission" (top-k / one-bit via
+    `repro.core.scheduler.ef_compress_leaf`), with or without error
+    feedback — the combination the paper's headline empirical claim is
+    about (EF may not help *asynchronous* sparsified SGD; see
+    ``benchmarks/bench_async_ef.py``);
+  * crashed workers (schedule entries of :data:`repro.core.delivery.DROPPED`)
+    deposit nothing — their gradient mass is lost, like the simulator's
+    crash model without substitution.
+
+With ``tau_max = 0`` every message is delivered in the step it was produced
+and the engine reduces exactly to synchronous data-parallel SGD — the
+parity tests pin it against :func:`repro.dist.train.make_train_step`.
+
+Like :func:`repro.dist.train.make_elastic_train_step`, the step body runs
+inside a ``shard_map`` manual over the data axes with the ``model`` axis
+left to GSPMD, so tensor parallelism is untouched.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ArchConfig
+from repro.core import delivery as DLV
+from repro.core.scheduler import ef_compress_leaf
+from repro.dist.sharding import (batch_shard_specs, replicated_specs,
+                                 shard_state_specs)
+from repro.dist.train import add_worker_dim, mean_grads, squeeze_worker_dim
+from repro.jax_compat import shard_map
+from repro.models import transformer as TF
+from repro.models import scan_utils as SU
+from repro.optim import apply_updates
+
+
+@dataclass(frozen=True)
+class AsyncConfig:
+    """Knobs of the emulated-asynchrony engine.
+
+    ``horizon`` is the length of the pre-drawn tau schedule table; steps
+    beyond it wrap around (set it >= the planned step count for faithful
+    crash schedules).
+    """
+
+    tau_max: int = 0              # staleness bound (0 == synchronous)
+    schedule: str = "uniform"     # repro.core.delivery.TAU_SCHEDULES
+    axis_names: tuple = ("data",)
+    compressor: str = "none"      # none | topk | onebit
+    error_feedback: bool = True   # EF residuals (only with a compressor)
+    topk_ratio: float = 1.0 / 64.0
+    horizon: int = 1024           # tau schedule table length
+    seed: int = 0                 # schedule RNG (oblivious adversary)
+    track_gap: bool = True        # stale_gap2 metric costs a 2nd pmean
+
+    @property
+    def capacity(self) -> int:
+        """Delay-ring capacity: a message delayed by ``tau <= tau_max``
+        deposited at slot ``(t + tau) % capacity`` is always taken before
+        the slot is reused."""
+        return self.tau_max + 1
+
+    @property
+    def has_err(self) -> bool:
+        return self.compressor != "none" and self.error_feedback
+
+
+def init_async_state(acfg: AsyncConfig, mesh, params_like) -> dict:
+    """Global layout of the state consumed by :func:`make_async_train_step`.
+
+    ``buf`` (the stale-gradient delay rings) and ``err`` (EF residuals,
+    only when compressing with error feedback) lead with a worker dim of
+    size prod(data axes) — per-worker data, sharded over the data axes by
+    `dist.sharding.sync_state_specs` exactly like ``init_dist_sync_state``'s
+    accumulators.  ``taus`` is the replicated (horizon, n_workers) delay
+    table; ``step`` the replicated step counter.
+    """
+    if acfg.schedule not in DLV.TAU_SCHEDULES:
+        raise ValueError(f"unknown schedule {acfg.schedule!r}")
+    sizes = dict(mesh.shape)
+    n = math.prod(sizes[a] for a in acfg.axis_names)
+    state = {
+        "step": jnp.zeros((), jnp.int32),
+        "taus": jnp.asarray(DLV.make_tau_schedule(
+            acfg.schedule, n, acfg.horizon, acfg.tau_max, acfg.seed)),
+        "buf": jax.tree.map(
+            lambda a: jnp.zeros((n, acfg.capacity, *a.shape), jnp.float32),
+            params_like),
+    }
+    if acfg.has_err:
+        state["err"] = jax.tree.map(
+            lambda a: jnp.zeros((n, *a.shape), jnp.float32), params_like)
+    return state
+
+
+def make_async_train_step(cfg: ArchConfig, opt, mesh, acfg: AsyncConfig,
+                          pspecs, flags: TF.RunFlags = TF.DEFAULT_FLAGS,
+                          grad_accum: int = 1):
+    """Bounded-staleness step: ``(params, opt_state, async_state, batch) ->
+    (params, opt_state, async_state, metrics)``.
+
+    ``async_state`` must use the :func:`init_async_state` layout.  Metrics:
+    ``loss`` (mean over workers), ``stale_gap2`` (||applied - fresh mean
+    gradient||^2 — zero when ``tau_max == 0``, the engine's realized
+    staleness gap) and ``mean_tau`` (mean effective delay this step).
+    The gap needs a second full-gradient pmean, so it is only computed when
+    ``acfg.track_gap`` — turn it off to keep the hot path at exactly the
+    synchronous all-reduce volume (the metric then reports 0).
+    """
+    from jax.sharding import PartitionSpec as P
+
+    manual = tuple(acfg.axis_names)
+    sizes = dict(mesh.shape)
+    auto = frozenset(a for a in mesh.axis_names if a not in manual
+                     and sizes[a] > 1)
+    head = manual if len(manual) > 1 else manual[0]
+    cap = acfg.capacity
+
+    def _compress(grads, err):
+        flat_g, treedef = jax.tree.flatten(grads)
+        flat_e = treedef.flatten_up_to(err)
+        flat_s = treedef.flatten_up_to(pspecs)
+        outs = [ef_compress_leaf(g, e, sp, acfg.compressor, acfg.topk_ratio)
+                for g, e, sp in zip(flat_g, flat_e, flat_s)]
+        return (jax.tree.unflatten(treedef, [o[0] for o in outs]),
+                jax.tree.unflatten(treedef, [o[1] for o in outs]))
+
+    def pmean(tree):
+        return jax.tree.map(
+            lambda a: jax.lax.pmean(a.astype(jnp.float32), axis_name=manual),
+            tree)
+
+    def local_step(params, opt_state, state, batch):
+        # jax 0.4.x partial-auto shard_map: unroll model scans (scan_utils)
+        with SU.unrolled(bool(auto)):
+            loss, _parts, grads = mean_grads(cfg, flags, params, batch,
+                                             grad_accum)
+        local = squeeze_worker_dim(state)
+        step = local["step"]
+
+        # this worker's delay for the gradient it just produced
+        widx = jnp.int32(0)
+        for a in manual:
+            widx = widx * sizes[a] + jax.lax.axis_index(a)
+        tau = local["taus"][step % local["taus"].shape[0], widx]
+        alive = (tau >= 0).astype(jnp.float32)     # DROPPED == crashed
+        d_eff = jnp.clip(tau, 0, acfg.tau_max)
+
+        # local sparsification before "transmission"
+        if acfg.compressor != "none":
+            err = local["err"] if acfg.has_err else jax.tree.map(
+                lambda g: jnp.zeros_like(g, jnp.float32), grads)
+            payload, new_err = _compress(grads, err)
+            if acfg.has_err:
+                local["err"] = new_err
+        else:
+            payload = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+
+        # bounded-delay delivery through this worker's rings: deposit the
+        # fresh payload tau steps ahead, take what lands this step
+        buf = DLV.tree_ring_deposit(
+            local["buf"], (step + d_eff) % cap,
+            jax.tree.map(lambda v: v * alive, payload))
+        stale, buf = DLV.tree_ring_take(buf, step % cap)
+        local["buf"] = buf
+
+        # the shared model applies the mean of everything delivered at t
+        synced = pmean(stale)
+        if acfg.track_gap:
+            fresh = pmean(grads)
+            gap2 = sum(jnp.sum(jnp.square(a - b)) for a, b in
+                       zip(jax.tree.leaves(synced), jax.tree.leaves(fresh)))
+        else:
+            gap2 = jnp.zeros(())
+
+        updates, opt_state = opt.update(synced, opt_state, params)
+        params = apply_updates(params, updates)
+        local["step"] = step + 1
+        metrics = {
+            "loss": jax.lax.pmean(loss, axis_name=manual),
+            "stale_gap2": gap2,
+            "mean_tau": jax.lax.pmean(d_eff.astype(jnp.float32),
+                                      axis_name=manual),
+        }
+        return params, opt_state, add_worker_dim(local), metrics
+
+    def step(params, opt_state, state, batch):
+        in_specs = (replicated_specs(params), replicated_specs(opt_state),
+                    shard_state_specs(state, head),
+                    batch_shard_specs(batch, head))
+        out_specs = (replicated_specs(params), replicated_specs(opt_state),
+                     shard_state_specs(state, head),
+                     {"loss": P(), "stale_gap2": P(), "mean_tau": P()})
+        fn = shard_map(local_step, mesh, in_specs, out_specs,
+                       check=False, auto=auto)
+        return fn(params, opt_state, state, batch)
+
+    return step

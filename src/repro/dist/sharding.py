@@ -118,28 +118,63 @@ def cache_specs(cfg: ArchConfig, mesh, cache) -> dict:
     return out
 
 
-# sync-state entries that are genuinely per-worker (one EF/residual
+# sync/async-state entries that are genuinely per-worker (one EF/residual
 # accumulator per data shard) vs replicated scalars — see
-# `dist.train.init_dist_sync_state` for the layout
+# `dist.train.init_dist_sync_state` / `dist.async_engine.init_async_state`
+# for the layouts.  RING keys additionally carry a delay-ring dim of size
+# ``tau_max + 1`` between the worker dim and the param dims.
 PER_WORKER_STATE_KEYS = ("err", "residual")
+PER_WORKER_RING_KEYS = ("buf",)
 
 
 def sync_state_specs(sync_state, pspecs, mesh) -> dict:
-    """Specs for the distributed sync-state layout
-    (`dist.train.init_dist_sync_state`): per-worker entries shard their
-    leading worker dim over the data axes (each shard holds only its own
-    accumulator) and keep the param specs' ``model`` sharding on the
-    trailing dims; everything else (step counters) replicates."""
+    """Specs for the distributed sync/async-state layouts
+    (`dist.train.init_dist_sync_state`, `dist.async_engine.init_async_state`):
+    per-worker entries shard their leading worker dim over the data axes
+    (each shard holds only its own accumulator) and keep the param specs'
+    ``model`` sharding on the trailing dims; ring entries replicate the ring
+    dim between the two; everything else (step counters, tau schedule
+    tables) replicates."""
     da = data_axes(mesh)
     head = da if len(da) > 1 else da[0]
     out = {}
     for key, val in sync_state.items():
-        if key in PER_WORKER_STATE_KEYS:
+        if key in PER_WORKER_RING_KEYS:
+            out[key] = jax.tree.map(
+                lambda spec: P(head, None, *tuple(spec)), pspecs,
+                is_leaf=_is_spec)
+        elif key in PER_WORKER_STATE_KEYS:
             out[key] = jax.tree.map(
                 lambda spec: P(head, *tuple(spec)), pspecs, is_leaf=_is_spec)
         else:
             out[key] = jax.tree.map(lambda _: P(), val)
     return out
+
+
+def replicated_specs(tree):
+    """``P()`` for every leaf — the in-``shard_map`` spec of a replicated
+    tree (params, optimizer state, scalar metrics)."""
+    return jax.tree.map(lambda _: P(), tree)
+
+
+def batch_shard_specs(tree, head):
+    """Leading-dim-over-``head`` specs for a batch tree inside
+    ``shard_map`` (shared by `dist.train` and `dist.async_engine` so the
+    batch-sharding rule cannot drift between the two step builders)."""
+    return jax.tree.map(
+        lambda a: P(head, *((None,) * (a.ndim - 1))), tree)
+
+
+def shard_state_specs(state, head) -> dict:
+    """In-``shard_map`` specs for a per-worker state dict: entries named in
+    the per-worker/ring key lists shard their leading worker dim over
+    ``head`` (the manual data axes), the rest replicate.  Built per-leaf
+    from ndim, so one builder serves every strategy/engine state layout
+    (used by `dist.train` and `dist.async_engine`)."""
+    worker_keys = PER_WORKER_STATE_KEYS + PER_WORKER_RING_KEYS
+    return {key: (batch_shard_specs(val, head) if key in worker_keys
+                  else replicated_specs(val))
+            for key, val in state.items()}
 
 
 def opt_state_specs(opt_state, pspecs):

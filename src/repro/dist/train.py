@@ -29,7 +29,9 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs.base import ArchConfig
 from repro.core.scheduler import SyncConfig, init_sync_state, sync_gradients
-from repro.dist.sharding import PER_WORKER_STATE_KEYS
+from repro.dist.sharding import (PER_WORKER_RING_KEYS, PER_WORKER_STATE_KEYS,
+                                 batch_shard_specs, replicated_specs,
+                                 shard_state_specs)
 from repro.jax_compat import shard_map
 from repro.models import transformer as TF
 from repro.models import scan_utils as SU
@@ -66,9 +68,10 @@ def _microbatch(batch, n: int):
         lambda a: a.reshape(n, a.shape[0] // n, *a.shape[1:]), batch)
 
 
-def _mean_grads(cfg, flags, params, batch, grad_accum: int):
+def mean_grads(cfg, flags, params, batch, grad_accum: int):
     """Loss + mean gradient, optionally accumulated over ``grad_accum``
-    microbatches with a ``lax.scan`` (keeps the HLO one-microbatch sized)."""
+    microbatches with a ``lax.scan`` (keeps the HLO one-microbatch sized).
+    Shared by every train-step builder here and in `dist.async_engine`."""
     vg = _value_and_grad(cfg, flags)
     if grad_accum <= 1:
         (loss, parts), grads = vg(params, batch)
@@ -104,7 +107,7 @@ def make_train_step(cfg: ArchConfig, opt, flags: TF.RunFlags = TF.DEFAULT_FLAGS,
     (the BytePS-semantics baseline every relaxation is compared against)."""
 
     def step(params, opt_state, batch):
-        loss, parts, grads = _mean_grads(cfg, flags, params, batch, grad_accum)
+        loss, parts, grads = mean_grads(cfg, flags, params, batch, grad_accum)
         updates, opt_state = opt.update(grads, opt_state, params)
         params = apply_updates(params, updates)
         metrics = {"loss": loss, "grad_norm": global_norm(grads), **parts}
@@ -114,9 +117,25 @@ def make_train_step(cfg: ArchConfig, opt, flags: TF.RunFlags = TF.DEFAULT_FLAGS,
 
 
 # strategy-state entries that hold one accumulator PER data shard (EF error,
-# elastic residual) — everything else (step counters) is replicated; shared
-# with `dist.sharding.sync_state_specs` so step layout and specs can't drift
-_PER_WORKER_KEYS = PER_WORKER_STATE_KEYS
+# elastic residual, async delay rings) — everything else (step counters) is
+# replicated; shared with `dist.sharding.sync_state_specs` so step layout
+# and specs can't drift
+_PER_WORKER_KEYS = PER_WORKER_STATE_KEYS + PER_WORKER_RING_KEYS
+
+
+def squeeze_worker_dim(state: dict) -> dict:
+    """Inside ``shard_map``: per-worker entries arrive as this shard's
+    (1, ...) slice of the global worker-dim layout — drop the dim."""
+    return {k: (jax.tree.map(lambda a: jnp.squeeze(a, 0), v)
+                if k in _PER_WORKER_KEYS else v)
+            for k, v in state.items()}
+
+
+def add_worker_dim(state: dict) -> dict:
+    """Inverse of :func:`squeeze_worker_dim` before leaving the shard_map."""
+    return {k: (jax.tree.map(lambda a: a[None], v)
+                if k in _PER_WORKER_KEYS else v)
+            for k, v in state.items()}
 
 
 def init_dist_sync_state(scfg: SyncConfig, mesh, params_like) -> dict:
@@ -175,18 +194,14 @@ def make_elastic_train_step(cfg: ArchConfig, opt, mesh, scfg: SyncConfig,
         # fatal XLA SPMD-partitioner check, so unroll the model scans
         # whenever auto (tensor-parallel) axes are present (see scan_utils)
         with SU.unrolled(bool(auto)):
-            loss, parts, grads = _mean_grads(cfg, flags, params, batch,
-                                             grad_accum)
+            loss, parts, grads = mean_grads(cfg, flags, params, batch,
+                                            grad_accum)
         # per-worker state arrives as this shard's (1, ...) slice of the
         # global worker-dim layout (init_dist_sync_state)
-        local = {k: (jax.tree.map(lambda a: jnp.squeeze(a, 0), v)
-                     if k in _PER_WORKER_KEYS else v)
-                 for k, v in sync_state.items()}
+        local = squeeze_worker_dim(sync_state)
         synced, local, smetrics = sync_gradients(
             scfg, grads, local, specs=pspecs, static_phase=static_phase)
-        sync_state = {k: (jax.tree.map(lambda a: a[None], v)
-                          if k in _PER_WORKER_KEYS else v)
-                      for k, v in local.items()}
+        sync_state = add_worker_dim(local)
         updates, opt_state = opt.update(synced, opt_state, params)
         params = apply_updates(params, updates)
         metrics = {
@@ -196,26 +211,14 @@ def make_elastic_train_step(cfg: ArchConfig, opt, mesh, scfg: SyncConfig,
         }
         return params, opt_state, sync_state, metrics
 
-    def replicated(tree):
-        return jax.tree.map(lambda _: P(), tree)
-
-    def state_specs(state):
-        return {k: (jax.tree.map(
-                        lambda a: P(head, *((None,) * (a.ndim - 1))), v)
-                    if k in _PER_WORKER_KEYS else replicated(v))
-                for k, v in state.items()}
-
-    def batch_sharded(tree):
-        return jax.tree.map(
-            lambda a: P(head, *((None,) * (a.ndim - 1))), tree)
-
     def step(params, opt_state, sync_state, batch):
         # specs are built per-call from the actual arg trees, so one builder
         # serves every optimizer/strategy state layout
-        in_specs = (replicated(params), replicated(opt_state),
-                    state_specs(sync_state), batch_sharded(batch))
-        out_specs = (replicated(params), replicated(opt_state),
-                     state_specs(sync_state),
+        in_specs = (replicated_specs(params), replicated_specs(opt_state),
+                    shard_state_specs(sync_state, head),
+                    batch_shard_specs(batch, head))
+        out_specs = (replicated_specs(params), replicated_specs(opt_state),
+                     shard_state_specs(sync_state, head),
                      {"loss": P(), "gap2_over_alpha2": P()})
         fn = shard_map(local_step, mesh, in_specs, out_specs,
                        check=False, auto=auto)

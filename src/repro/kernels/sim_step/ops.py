@@ -62,44 +62,14 @@ def _resolve_impl(impl: str):
 
 def delivery_tensors(kind: str, p: int, T: int, per_step: dict,
                      per_run: dict, knobs: dict):
-    """Precompute the whole run's delivery tensors, vectorized over T.
-
-    Returns (U (T, m, p) float32, new_alive (T, p) bool or None).  Row 0 of
-    each U[t] weights the x update, rows 1..p the view updates (rows of
-    dead workers are zero, so no masking pass is needed downstream), rows
-    p+1..2p (``elastic_variance`` only) the deferred-correction update.
-    The step scale alpha/p is NOT folded in here — callers scale U once.
-    """
-    eye = jnp.eye(p, dtype=bool)
-    if kind in ("crash", "crash_subst"):
-        ts = jnp.arange(T)[:, None]
-        crash_step = per_run["crash_step"]               # (p,)
-        alive = crash_step[None, :] >= ts                # (T, p)
-        crashing = crash_step[None, :] == ts
-        new_alive = alive & ~crashing
-        base = alive[:, :, None] & alive[:, None, :]
-        heard = (per_run["hear_u"].T[None] < 0.5) \
-            & new_alive[:, :, None] & ~eye[None]
-        recv = jnp.where(crashing[:, None, :], heard, base)
-        in_recv = jnp.any(recv, axis=1)                  # (T, p)
-        w_v = recv.astype(jnp.float32) * new_alive[:, :, None]
-        if kind == "crash_subst":
-            missed = jnp.sum((~recv) & in_recv[:, None, :], axis=2)
-            w_v = w_v + eye[None] * (
-                missed.astype(jnp.float32) * new_alive)[:, :, None]
-        u = jnp.concatenate(
-            [in_recv.astype(jnp.float32)[:, None], w_v], axis=1)
-        return u, new_alive
-    if kind == "elastic_variance":
-        drop = (per_step["drop_u"] < knobs["drop_prob"]) & ~eye[None]
-        nd = jnp.sum(drop, axis=2).astype(jnp.float32)   # (T, p)
-        diag_nd = eye[None] * nd[:, :, None]
-        w_v = jnp.ones((T, p, p), jnp.float32) + diag_nd - drop
-        w_d = drop.astype(jnp.float32) - diag_nd
-        u = jnp.concatenate(
-            [jnp.ones((T, 1, p), jnp.float32), w_v, w_d], axis=1)
-        return u, None
-    raise ValueError(f"no delivery tensor for kind {kind!r}")
+    """Whole-run delivery-tensor precompute.  The authoritative
+    implementation lives in `repro.core.delivery` (shared with the
+    real-model async engine); this re-export keeps the fused-step API in
+    one namespace.  Imported at call time: ``repro.core``'s package init
+    pulls in `sim_engine`, which imports this package — a module-level
+    import here would cycle."""
+    from repro.core.delivery import delivery_tensors as _delivery_tensors
+    return _delivery_tensors(kind, p, T, per_step, per_run, knobs)
 
 
 def fused_delivery_step(v, x, a, x_star, noise, u, defer=None, *,

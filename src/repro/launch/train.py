@@ -22,10 +22,21 @@ def _parse():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--lr", type=float, default=3e-3)
     ap.add_argument("--sync", default="exact",
-                    choices=["exact", "topk_ef", "onebit_ef", "elastic"])
+                    choices=["exact", "topk_ef", "onebit_ef", "elastic",
+                             "async"])
     ap.add_argument("--beta", type=float, default=0.9)
     ap.add_argument("--budget-b", type=float, default=0.0)
     ap.add_argument("--topk-ratio", type=float, default=1 / 16)
+    # --sync async: the bounded-staleness engine (repro.dist.async_engine)
+    ap.add_argument("--tau-max", type=int, default=4)
+    ap.add_argument("--async-schedule", default="uniform",
+                    choices=["constant", "uniform", "roundrobin",
+                             "straggler", "crash"])
+    ap.add_argument("--compressor", default="none",
+                    choices=["none", "topk", "onebit"])
+    ap.add_argument("--ef", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="error feedback for --compressor (async path)")
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--model-shards", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
@@ -52,6 +63,8 @@ def main():
     from repro.core.scheduler import SyncConfig
     from repro.data.pipeline import SyntheticLMDataset
     from repro.dist import sharding as SH
+    from repro.dist.async_engine import (AsyncConfig, init_async_state,
+                                         make_async_train_step)
     from repro.dist.train import (init_dist_sync_state,
                                   make_elastic_train_step, make_train_step)
     from repro.launch.mesh import make_host_mesh
@@ -71,20 +84,33 @@ def main():
     data = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
                               seed=args.seed)
 
-    step_idx = 0
-    if args.ckpt_dir:
-        last = latest_step(args.ckpt_dir)
-        if last is not None:
-            params, opt_state = load_checkpoint(args.ckpt_dir, last)
-            step_idx = last
-            print(f"resumed from step {last}")
-
     if args.sync == "exact":
+        sync_state = {"step": jnp.zeros((), jnp.int32)}
         step = jax.jit(make_train_step(cfg, opt, flags), donate_argnums=(0, 1))
 
         def run(params, opt_state, sync_state, batch):
             params, opt_state, metrics = step(params, opt_state, batch)
             return params, opt_state, sync_state, metrics
+    elif args.sync == "async":
+        # horizon is decoupled from --steps (up to 1024) so resuming with a
+        # larger --steps reuses the checkpointed tau table unchanged and
+        # never wraps it.  The crash schedule is the exception: its crash
+        # point is horizon//2, so its table must be run-length-aligned for
+        # workers to actually die mid-run — extending a crash run needs the
+        # original --steps (the resume shape guard enforces this).
+        horizon = max(args.steps, 1) if args.async_schedule == "crash" \
+            else max(args.steps, 1024)
+        acfg = AsyncConfig(
+            tau_max=args.tau_max, schedule=args.async_schedule,
+            axis_names=("data",), compressor=args.compressor,
+            error_feedback=args.ef, topk_ratio=args.topk_ratio,
+            horizon=horizon, seed=args.seed)
+        sync_state = init_async_state(acfg, mesh, params)
+        astep = make_async_train_step(cfg, opt, mesh, acfg, pspecs, flags)
+        jstep = jax.jit(astep, donate_argnums=(0, 1, 2))
+
+        def run(params, opt_state, sync_state, batch):
+            return jstep(params, opt_state, sync_state, batch)
     else:
         scfg = SyncConfig(
             strategy=args.sync, axis_names=("data",),
@@ -98,7 +124,31 @@ def main():
         def run(params, opt_state, sync_state, batch):
             return jstep(params, opt_state, sync_state, batch)
 
-    sync_state = locals().get("sync_state", {"step": jnp.zeros((), jnp.int32)})
+    step_idx = 0
+    if args.ckpt_dir:
+        last = latest_step(args.ckpt_dir)
+        if last is not None:
+            restored = load_checkpoint(args.ckpt_dir, last)
+            if len(restored) == 3:
+                # delay rings / EF residuals / tau-table position resume
+                # with the params — a mid-flight stale gradient survives
+                # the restart (tests/test_ckpt_roundtrip.py)
+                params, opt_state, ckpt_state = restored
+                if jax.tree.map(np.shape, sync_state) != \
+                        jax.tree.map(np.shape, ckpt_state):
+                    raise ValueError(
+                        "checkpointed sync/async state does not match the "
+                        "current --sync configuration (different strategy, "
+                        "--tau-max, --compressor, --ef, or a --steps change "
+                        "that resized the tau table?) — delay rings and tau "
+                        "schedules cannot be reinterpreted; resume with the "
+                        "original flags or use a fresh --ckpt-dir")
+                sync_state = ckpt_state
+            else:  # legacy (params, opt_state) checkpoints
+                params, opt_state = restored
+            step_idx = last
+            print(f"resumed from step {last}")
+
     losses = []
     for t in range(step_idx, args.steps):
         batch = data.batch(t)
@@ -106,12 +156,17 @@ def main():
             params, opt_state, sync_state, batch)
         losses.append(float(metrics["loss"]))
         if t % args.log_every == 0:
-            gap = float(metrics.get("gap2_over_alpha2", 0.0))
-            print(f"step {t:5d}  loss {losses[-1]:.4f}  gap2/a2 {gap:.4g}",
-                  flush=True)
+            gap = float(metrics.get("gap2_over_alpha2",
+                                    metrics.get("stale_gap2", 0.0)))
+            tau = ""
+            if "mean_tau" in metrics:
+                tau = f"  tau {float(metrics['mean_tau']):.2f}"
+            print(f"step {t:5d}  loss {losses[-1]:.4f}  gap2/a2 {gap:.4g}"
+                  f"{tau}", flush=True)
         if args.ckpt_dir and args.ckpt_every and \
                 (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, t + 1, (params, opt_state))
+            save_checkpoint(args.ckpt_dir, t + 1,
+                            (params, opt_state, sync_state))
     print(f"final loss {np.mean(losses[-10:]):.4f}")
     return losses
 

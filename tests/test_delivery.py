@@ -1,0 +1,216 @@
+"""Property tests for `repro.core.delivery` — the delay-ring / staleness /
+delivery-tensor machinery shared by the simulator and the real-model async
+engine.
+
+Invariants under test:
+
+  * delay rings deliver every deposit exactly once, exactly ``delay`` steps
+    after it was made (conservation + bounded staleness),
+  * one-hot delay masks partition the messages (summed over levels every
+    entry is exactly 1 — "row-stochastic where required"),
+  * tau schedules never exceed ``tau_max`` (crashed entries are DROPPED),
+  * crash/crash_subst delivery tensors conserve gradient mass across
+    workers (substitution makes every alive receiver's row sum equal the
+    globally-received count), and the elastic_variance tensors are exactly
+    mass-preserving (view rows sum to p, defer rows to 0).
+
+The deterministic versions always run; the randomized versions need the
+``hypothesis`` package (installed in CI; skipped where absent).
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import delivery as DLV
+from repro.core.sim_types import Relaxation, make_schedule
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # containers without hypothesis: CI still runs these
+    HAVE_HYPOTHESIS = False
+
+
+# ---------------------------------------------------------------------------
+# shared checkers (called from both deterministic and property tests)
+# ---------------------------------------------------------------------------
+
+def run_ring(delays: np.ndarray, tau_max: int):
+    """Drive a delay ring with one message per (step, worker), delay table
+    ``delays`` (T, p); message payload is one-hot in the source-step dim so
+    each take reveals exactly which steps' messages were delivered."""
+    t_steps, p = delays.shape
+    cap = tau_max + 1
+    ring = DLV.ring_init(cap, (p, t_steps))
+    taken = []
+    for t in range(t_steps + tau_max):
+        if t < t_steps:
+            payload = np.zeros((p, t_steps), np.float32)
+            payload[np.arange(p), t] = 1.0
+            d = np.clip(delays[t], 0, tau_max)
+            alive = (delays[t] >= 0).astype(np.float32)
+            for w in range(p):  # per-worker slot (workers delay independently)
+                ring = ring.at[(t + int(d[w])) % cap, w].add(
+                    payload[w] * alive[w])
+        out, ring = DLV.ring_take(ring, t % cap)
+        taken.append(np.asarray(out))
+    return np.stack(taken)  # (T + tau_max, p, T): taken[t, w, s]
+
+
+def check_ring_invariants(delays: np.ndarray, tau_max: int):
+    taken = run_ring(delays, tau_max)
+    t_steps, p = delays.shape
+    for s in range(t_steps):
+        for w in range(p):
+            hits = np.nonzero(taken[:, w, s])[0]
+            if delays[s, w] < 0:  # DROPPED: never delivered
+                assert hits.size == 0
+                continue
+            # delivered exactly once (conservation) ...
+            assert hits.size == 1 and taken[hits[0], w, s] == 1.0
+            # ... exactly `delay` steps later, within the staleness bound
+            assert hits[0] - s == delays[s, w] <= tau_max
+
+
+def check_crash_conservation(kind: str, p: int, f: int, t_steps: int,
+                             seed: int):
+    relax = Relaxation(kind=kind, f=f)
+    sched = make_schedule(relax, p, 4, t_steps, seed)
+    u, new_alive = DLV.delivery_tensors(
+        kind, p, t_steps,
+        {k: jnp.asarray(v) for k, v in sched.per_step.items()},
+        {k: jnp.asarray(v) for k, v in sched.per_run.items()},
+        {"drop_prob": jnp.float32(0.3)})
+    u = np.asarray(u)
+    alive = np.asarray(new_alive)
+    in_recv = u[:, 0, :]                       # x applies each grad <= once
+    assert np.all((in_recv == 0) | (in_recv == 1))
+    rows = u[:, 1:, :]
+    # dead workers' rows are identically zero (no masking needed downstream)
+    assert np.all(rows[~alive] == 0)
+    row_sums = rows.sum(axis=2)
+    if kind == "crash_subst":
+        # substitution conserves mass: every alive receiver applies exactly
+        # as many gradient-equivalents as there are globally-received grads
+        expect = in_recv.sum(axis=1, keepdims=True)
+        assert np.allclose(row_sums[alive],
+                           np.broadcast_to(expect, row_sums.shape)[alive])
+    else:
+        # without substitution mass can only be lost, never created
+        # (dead rows are zero, so the bound holds for every row)
+        assert np.all(row_sums <= in_recv.sum(axis=1)[:, None] + 1e-6)
+
+
+# ---------------------------------------------------------------------------
+# deterministic tests (always run)
+# ---------------------------------------------------------------------------
+
+def test_ring_exactly_once_roundrobin():
+    delays = DLV.make_tau_schedule("roundrobin", 3, 12, 4)
+    check_ring_invariants(delays, 4)
+
+
+def test_ring_exactly_once_crash_schedule():
+    delays = DLV.make_tau_schedule("crash", 4, 10, 2, seed=3)
+    assert (delays == DLV.DROPPED).any()       # somebody actually crashes
+    check_ring_invariants(delays, 2)
+
+
+def test_ring_tau0_is_synchronous():
+    delays = np.zeros((6, 2), np.int32)
+    taken = run_ring(delays, 0)
+    for t in range(6):                         # delivered in the same step
+        assert taken[t, :, t].sum() == 2
+
+
+def test_delay_masks_partition():
+    rng = np.random.default_rng(0)
+    delays = rng.integers(0, 5, size=(7, 3, 3))
+    masks = DLV.delay_masks(delays, 5)
+    assert masks.shape == (5, 7, 3, 3)
+    np.testing.assert_array_equal(np.asarray(masks).sum(axis=0), 1.0)
+
+
+def test_tau_schedules_bounded():
+    for sched in DLV.TAU_SCHEDULES:
+        taus = DLV.make_tau_schedule(sched, 4, 20, 3, seed=1)
+        assert taus.shape == (20, 4) and taus.dtype == np.int32
+        live = taus[taus != DLV.DROPPED]
+        assert live.min() >= 0 and live.max() <= 3
+        if sched != "crash":
+            assert (taus >= 0).all()
+    # determinism: one seed, one table
+    a = DLV.make_tau_schedule("uniform", 4, 20, 3, seed=7)
+    b = DLV.make_tau_schedule("uniform", 4, 20, 3, seed=7)
+    np.testing.assert_array_equal(a, b)
+    with pytest.raises(ValueError):
+        DLV.make_tau_schedule("nope", 4, 20, 3)
+
+
+def test_tau_schedule_shapes_and_styles():
+    assert (DLV.make_tau_schedule("constant", 3, 5, 2) == 2).all()
+    rr = DLV.make_tau_schedule("roundrobin", 3, 6, 2)
+    assert rr[0, 0] == 0 and rr[1, 0] == 1 and rr[0, 1] == 1
+    strag = DLV.make_tau_schedule("straggler", 4, 5, 3)
+    assert (strag[:, -1] == 3).all() and (strag[:, :-1] == 0).all()
+
+
+def test_elastic_variance_tensor_mass_neutral():
+    relax = Relaxation(kind="elastic_variance", drop_prob=0.4)
+    sched = make_schedule(relax, 5, 4, 9, seed=2)
+    u, _ = DLV.delivery_tensors(
+        "elastic_variance", 5, 9,
+        {"drop_u": jnp.asarray(sched.per_step["drop_u"])}, {},
+        {"drop_prob": jnp.float32(0.4)})
+    u = np.asarray(u)
+    assert np.allclose(u[:, 0, :], 1.0)            # x applies everything
+    np.testing.assert_allclose(u[:, 1:6, :].sum(axis=2), 5.0, atol=1e-6)
+    np.testing.assert_allclose(u[:, 6:, :].sum(axis=2), 0.0, atol=1e-6)
+
+
+def test_crash_conservation_deterministic():
+    check_crash_conservation("crash_subst", 6, 2, 12, seed=0)
+    check_crash_conservation("crash", 6, 2, 12, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property tests (CI installs hypothesis in both lanes)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(p=st.integers(1, 5), t_steps=st.integers(1, 12),
+           tau_max=st.integers(0, 4),
+           sched=st.sampled_from(DLV.TAU_SCHEDULES),
+           seed=st.integers(0, 10))
+    def test_ring_delivery_property(p, t_steps, tau_max, sched, seed):
+        delays = DLV.make_tau_schedule(sched, p, t_steps, tau_max, seed)
+        check_ring_invariants(delays, tau_max)
+
+    @settings(max_examples=30, deadline=None)
+    @given(p=st.integers(1, 6), t_steps=st.integers(1, 16),
+           tau_max=st.integers(0, 5),
+           sched=st.sampled_from(DLV.TAU_SCHEDULES),
+           seed=st.integers(0, 100))
+    def test_tau_bounded_property(p, t_steps, tau_max, sched, seed):
+        taus = DLV.make_tau_schedule(sched, p, t_steps, tau_max, seed)
+        live = taus[taus != DLV.DROPPED]
+        assert live.size == 0 or (0 <= live.min() and live.max() <= tau_max)
+
+    @settings(max_examples=20, deadline=None)
+    @given(levels=st.integers(1, 6), t_steps=st.integers(1, 8),
+           p=st.integers(1, 5), seed=st.integers(0, 50))
+    def test_delay_masks_partition_property(levels, t_steps, p, seed):
+        rng = np.random.default_rng(seed)
+        delays = rng.integers(0, levels, size=(t_steps, p, p))
+        total = np.asarray(DLV.delay_masks(delays, levels)).sum(axis=0)
+        np.testing.assert_array_equal(total, 1.0)
+
+    @settings(max_examples=20, deadline=None)
+    @given(kind=st.sampled_from(["crash", "crash_subst"]),
+           p=st.integers(2, 7), data=st.data(),
+           t_steps=st.integers(2, 14), seed=st.integers(0, 50))
+    def test_crash_mass_conservation_property(kind, p, data, t_steps, seed):
+        f = data.draw(st.integers(0, p - 1))
+        check_crash_conservation(kind, p, f, t_steps, seed)

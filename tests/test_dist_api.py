@@ -21,6 +21,7 @@ import numpy as np
 import pytest
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.dist import async_engine as AE
 from repro.dist import sharding as SH
 from repro.dist import train as DT
 
@@ -59,6 +60,22 @@ def test_train_symbols_and_signatures():
     assert params_of(SH.sync_state_specs) == ["sync_state", "pspecs", "mesh"]
     assert params_of(DT.make_prefill_step) == ["cfg", "max_len", "flags"]
     assert params_of(DT.make_decode_step) == ["cfg", "flags"]
+
+
+def test_async_engine_symbols_and_signatures():
+    assert params_of(AE.make_async_train_step) == [
+        "cfg", "opt", "mesh", "acfg", "pspecs", "flags", "grad_accum"]
+    assert params_of(AE.init_async_state) == ["acfg", "mesh", "params_like"]
+    acfg = AE.AsyncConfig()
+    # the config surface launch/train + bench_async_ef drive
+    assert acfg.tau_max == 0 and acfg.schedule == "uniform"
+    assert acfg.compressor == "none" and acfg.error_feedback is True
+    assert acfg.capacity == 1 and acfg.has_err is False
+    from repro.core.delivery import DROPPED, TAU_SCHEDULES
+    assert acfg.schedule in TAU_SCHEDULES and DROPPED == -1
+    # per-worker key registry shared between layout and spec builders
+    assert "buf" in SH.PER_WORKER_RING_KEYS
+    assert params_of(SH.shard_state_specs) == ["state", "head"]
 
 
 def test_launch_modules_import():
