@@ -1,0 +1,283 @@
+"""Serving-path acceptance + perf: continuous batching on the paged cache.
+
+Replays deterministic request traces (mixed prompt/generation lengths,
+staggered arrivals) through `repro.serve` and emits:
+
+  * ``accept/serve_paged_parity`` — every request decoded by the continuous
+    engine on the paged KV cache must be BITWISE equal to the legacy
+    dense-cache B=1 loop for the same prompt (fp32 kv, prompt lengths
+    multiples of the page size, matched gather width — the conditions under
+    which the paged gather is a pure reshape of the dense cache),
+  * ``accept/serve_continuous_vs_static`` — same trace, useful tokens/s of
+    the continuous pump vs static arrival-order batches (each static batch
+    decodes until its *longest* request finishes); continuous must win on a
+    mixed-generation-length trace at matched outputs,
+  * ``serve/p50_latency_steps`` / ``serve/p99_latency_steps`` (+ static
+    variants) — per-request latency in virtual decode steps,
+  * ``accept/serve_replica_staleness`` — serving from a `ParamReplica` while
+    training publishes every step: observed staleness must stay within
+    ``tau_serve`` (the elastic-consistency bound applied to serving),
+  * ``serve/paged_decode_us`` vs ``serve/dense_decode_us`` — one decode
+    step, paged engine vs dense-cache legacy step at the same batch width.
+
+Everything runs in-process on the default host device; ``BENCH_SIM_SMOKE=1``
+shrinks the traces for the CI fast lane.
+"""
+from __future__ import annotations
+
+import os
+import time
+
+import numpy as np
+
+from benchmarks.common import row, timed
+
+SMOKE = bool(os.environ.get("BENCH_SIM_SMOKE"))
+ARCH = "qwen3-1.7b-smoke"
+PS = 8                                      # page size
+SLOTS = 2 if SMOKE else 4                   # engine request slots
+TAU_SERVE = 3
+
+
+def _ctx():
+    """Shared model context (params in fp32-kv flags for bitwise parity)."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.configs import get_config
+    from repro.models import transformer as TF
+    from repro.models.params import init_params
+
+    cfg = get_config(ARCH)
+    flags = TF.RunFlags(remat=False, kv_cache_dtype=jnp.float32)
+    params = init_params(TF.model_defs(cfg), jax.random.PRNGKey(0))
+    return cfg, flags, params
+
+
+def _prompts(cfg, lens, seed=0):
+    rng = np.random.default_rng(seed)
+    return [rng.integers(0, cfg.vocab_size, size=s, dtype=np.int32)
+            for s in lens]
+
+
+def _legacy_loop(cfg, flags, params, prompt, n_new, max_len):
+    """B=1 dense-cache greedy loop; returns (n_new,) numpy tokens."""
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.train import make_decode_step, make_prefill_step
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len, flags))
+    decode = jax.jit(make_decode_step(cfg, flags))
+    tok, cache = prefill(params, {"tokens": jnp.asarray(prompt)[None]})
+    out = [tok]
+    for _ in range(n_new - 1):
+        tok, cache = decode(params, cache, tok[:, None])
+        out.append(tok)
+    return np.asarray(jnp.stack(out, axis=1))[0]
+
+
+def _run_trace(engine, trace, queue_limit=64):
+    from repro.serve import ContinuousScheduler
+
+    sched = ContinuousScheduler(engine, queue_limit=queue_limit)
+    toks = sched.run(trace)
+    return sched, toks
+
+
+def _parity_rows(cfg, flags, params):
+    from repro.serve import PagedCacheConfig, Request, StepEngine
+
+    lens = [8, 16] if SMOKE else [8, 16, 8, 24]
+    gens = [4, 6] if SMOKE else [6, 10, 4, 8]
+    arrivals = [0, 0] if SMOKE else [0, 0, 1, 3]
+    n_table = max((s + g + PS - 1) // PS for s, g in zip(lens, gens))
+    max_len = n_table * PS                  # matched gather width
+    pcfg = PagedCacheConfig(page_size=PS, num_pages=SLOTS * n_table,
+                            max_requests=SLOTS, max_pages_per_seq=n_table)
+    engine = StepEngine(cfg, params, pcfg, flags)
+    prompts = _prompts(cfg, lens)
+    trace = [Request(rid=i, prompt=p, max_new=g, arrival=a)
+             for i, (p, g, a) in enumerate(zip(prompts, gens, arrivals))]
+
+    t0 = time.perf_counter()
+    sched, toks = _run_trace(engine, trace)
+    dt = time.perf_counter() - t0
+    engine.alloc.check()
+    assert engine.alloc.n_free == pcfg.num_pages, "page leak after drain"
+
+    bad = 0
+    for i, (p, g) in enumerate(zip(prompts, gens)):
+        ref = _legacy_loop(cfg, flags, params, p, g, max_len)
+        bad += int(np.sum(toks[i] != ref))
+    ok = "OK" if bad == 0 else "FAIL"
+    return [row("accept/serve_paged_parity", dt * 1e6 / max(sched.clock, 1),
+                f"mismatched_tokens={bad} over {len(lens)} mixed-length "
+                f"staggered requests: {ok}")]
+
+
+def _throughput_rows(cfg, flags, params):
+    from repro.serve import PagedCacheConfig, Request, StepEngine
+
+    # interleaved long/short generations: the worst case for static
+    # batching, whose every batch decodes until its longest member finishes
+    prompt_len = PS
+    gens = ([20, 2] * (2 * SLOTS))[:4 * SLOTS] if SMOKE \
+        else ([28, 3] * (2 * SLOTS))[:4 * SLOTS]
+    n_req = len(gens)
+    n_table = (prompt_len + max(gens) + PS - 1) // PS
+    prompts = _prompts(cfg, [prompt_len] * n_req, seed=1)
+    useful = sum(gens)
+
+    # ONE engine serves both policies: the comparison isolates the
+    # admission policy (gang-scheduled batches vs per-step continuous) on
+    # identical kernels, prefill path and cache layout.  (Dense-vs-paged is
+    # the parity + decode-us rows' job.)
+    pcfg = PagedCacheConfig(page_size=PS, num_pages=SLOTS * n_table,
+                            max_requests=SLOTS, max_pages_per_seq=n_table)
+    engine = StepEngine(cfg, params, pcfg, flags)
+
+    def static_run():
+        """Arrival-order batches of SLOTS; a batch is admitted together,
+        decoded until its LONGEST request finishes, evicted together."""
+        latencies, clock = [], 0
+        for b0 in range(0, n_req, SLOTS):
+            bg = gens[b0:b0 + SLOTS]
+            for j, g in enumerate(bg):
+                engine.start(b0 + j, prompts[b0 + j], g)
+            steps = max(bg)                 # tokens incl. the prefill one
+            for _ in range(steps - 1):
+                engine.step()
+            engine.tokens.block_until_ready()
+            for j, g in enumerate(bg):
+                engine.finish(b0 + j)
+                latencies.append(clock + g)  # streamed: own last token
+            clock += steps
+        return latencies, clock
+
+    static_run()                            # compile
+    t0 = time.perf_counter()
+    static_lat, static_steps = static_run()
+    static_s = time.perf_counter() - t0
+
+    # -- continuous: same requests, same engine, all arriving at step 0
+    trace = [Request(rid=i, prompt=p, max_new=g, arrival=0)
+             for i, (p, g) in enumerate(zip(prompts, gens))]
+    _run_trace(engine, trace)               # warm scheduler path
+    t0 = time.perf_counter()
+    sched, _ = _run_trace(engine, trace)
+    cont_s = time.perf_counter() - t0
+
+    cont_tps = useful / cont_s
+    stat_tps = useful / static_s
+    ok = "OK" if cont_tps > stat_tps else "FAIL"
+    p50, p99 = sched.latency_percentiles()
+    sp50, sp99 = (float(np.percentile(static_lat, 50)),
+                  float(np.percentile(static_lat, 99)))
+    return [
+        row("accept/serve_continuous_vs_static", cont_s * 1e6,
+            f"continuous={cont_tps:.1f} static={stat_tps:.1f} tok/s "
+            f"({sched.clock} vs {static_steps} steps, {useful} useful "
+            f"tokens): {ok}"),
+        row("serve/p50_latency_steps", p50, f"continuous, {n_req} requests"),
+        row("serve/p99_latency_steps", p99, f"continuous, {n_req} requests"),
+        row("serve/static_p50_latency_steps", sp50,
+            f"static batches of {SLOTS}"),
+        row("serve/static_p99_latency_steps", sp99,
+            f"static batches of {SLOTS}"),
+    ]
+
+
+def _replica_rows(cfg, flags, params):
+    from repro.serve import (PagedCacheConfig, ParamReplica, Request,
+                             StepEngine)
+    from repro.serve.scheduler import ContinuousScheduler
+
+    gens = [4, 8] if SMOKE else [6, 14]
+    n_table = (PS + max(gens) + PS - 1) // PS
+    pcfg = PagedCacheConfig(page_size=PS, num_pages=2 * n_table,
+                            max_requests=2, max_pages_per_seq=n_table)
+    replica = ParamReplica(params, TAU_SERVE, schedule="straggler", seed=3)
+    engine = StepEngine(cfg, params, pcfg, flags, replica=replica)
+    sched = ContinuousScheduler(engine)
+    for i, (p, g) in enumerate(zip(_prompts(cfg, [PS, PS], seed=2), gens)):
+        sched.submit(Request(rid=i, prompt=p, max_new=g, arrival=0))
+
+    version, seen = 0, []
+    t0 = time.perf_counter()
+    while sched.queue or sched._live or sched.clock == 0:
+        version += 1
+        replica.publish(params, version)    # training advances every step
+        if sched.clock % 2 == 0:
+            replica.refresh()
+        sched.step()
+        seen.append(replica.staleness)
+        if sched.clock > 1000:
+            raise RuntimeError("replica serve loop did not drain")
+    dt = time.perf_counter() - t0
+    sched.drain()
+    worst = max(seen)
+    ok = "OK" if worst <= TAU_SERVE else "FAIL"
+    return [row("accept/serve_replica_staleness", dt * 1e6 / len(seen),
+                f"max_staleness={worst} tau_serve={TAU_SERVE} over "
+                f"{version} published versions: {ok}")]
+
+
+def _decode_step_rows(cfg, flags, params):
+    import jax
+    import jax.numpy as jnp
+
+    from repro.dist.train import make_decode_step, make_prefill_step
+    from repro.serve import PagedCacheConfig, Request, StepEngine
+
+    steps = 8 if SMOKE else 32
+    n_table = (PS + steps + 2 + PS - 1) // PS
+    max_len = n_table * PS
+    pcfg = PagedCacheConfig(page_size=PS, num_pages=SLOTS * n_table,
+                            max_requests=SLOTS, max_pages_per_seq=n_table)
+    engine = StepEngine(cfg, params, pcfg, flags)
+    for i, p in enumerate(_prompts(cfg, [PS] * SLOTS, seed=4)):
+        engine.start(i, p, steps + 2)
+
+    def paged_step():
+        return engine.step().block_until_ready()
+
+    _, paged_us = timed(paged_step, warmup=2, iters=min(4, steps))
+
+    prefill = jax.jit(make_prefill_step(cfg, max_len, flags))
+    decode = jax.jit(make_decode_step(cfg, flags))
+    batch = {"tokens": jnp.asarray(np.stack(_prompts(
+        cfg, [PS] * SLOTS, seed=4)))}
+    tok, cache = prefill(params, batch)
+    state = {"tok": tok, "cache": cache}
+
+    def dense_step():
+        t, c = decode(params, state["cache"], state["tok"][:, None])
+        state["tok"], state["cache"] = t, c
+        return t.block_until_ready()
+
+    _, dense_us = timed(dense_step, warmup=2, iters=min(4, steps))
+    for i in range(SLOTS):
+        engine.finish(i)
+    engine.alloc.check()
+    return [
+        row("serve/paged_decode_us", paged_us,
+            f"{SLOTS}-slot paged engine step"),
+        row("serve/dense_decode_us", dense_us,
+            f"B={SLOTS} dense-cache legacy step, max_len={max_len}"),
+    ]
+
+
+def run():
+    cfg, flags, params = _ctx()
+    rows = []
+    rows += _parity_rows(cfg, flags, params)
+    rows += _throughput_rows(cfg, flags, params)
+    rows += _replica_rows(cfg, flags, params)
+    rows += _decode_step_rows(cfg, flags, params)
+    return rows
+
+
+if __name__ == "__main__":
+    from benchmarks.common import print_rows
+    print_rows(run())

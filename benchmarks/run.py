@@ -24,6 +24,7 @@ MODULES = [
     "benchmarks.bench_sim_step_kernel",
     "benchmarks.bench_async_ef",
     "benchmarks.bench_kernels",
+    "benchmarks.bench_serve",
     "benchmarks.bench_roofline",
 ]
 

@@ -66,10 +66,30 @@ def ring_take(ring: jax.Array, slot):
     return ring[slot], ring.at[slot].set(jnp.zeros((), ring.dtype))
 
 
+def ring_put(ring: jax.Array, slot, value) -> jax.Array:
+    """Overwrite ``slot`` (publish/replace semantics).  Gradient delivery
+    uses the accumulating :func:`ring_deposit`; *version* rings — e.g. the
+    serving replica's parameter-version ring (`repro.serve.replica`), where
+    slot ``v % capacity`` holds snapshot ``v`` and a republish replaces it —
+    use this."""
+    return ring.at[slot].set(value)
+
+
 def tree_ring_init(capacity: int, tree, dtype=jnp.float32):
     """Per-leaf :func:`ring_init` over a pytree of arrays/shapes."""
     return jax.tree.map(
         lambda a: ring_init(capacity, jnp.shape(a), dtype), tree)
+
+
+def tree_ring_put(rings, slot, tree):
+    """Per-leaf :func:`ring_put` (overwrite) over a pytree."""
+    return jax.tree.map(lambda r, v: ring_put(r, slot, v), rings, tree)
+
+
+def tree_ring_read(rings, slot):
+    """Read ``slot`` without consuming it (a version ring is read many
+    times — unlike delivery rings, reads must not zero the slot)."""
+    return jax.tree.map(lambda r: r[slot], rings)
 
 
 def tree_ring_deposit(rings, slot, tree):

@@ -118,6 +118,19 @@ def cache_specs(cfg: ArchConfig, mesh, cache) -> dict:
     return out
 
 
+def paged_cache_specs(cfg: ArchConfig, mesh, pool) -> P:
+    """Spec for one paged KV pool (`repro.serve.paged_cache.init_page_pool`
+    leaf, (L, P+1, page_size, K, hd)): kv-heads shard over ``model`` when
+    divisible, everything else replicated.  The page dim is deliberately NOT
+    sharded — the pool is one global resource indexed by per-request page
+    tables, and sharding pages over data would turn every table gather into
+    an all-to-all; replicating pages keeps gathers local (the serving
+    analogue of the dense cache's replicated T dim)."""
+    del cfg
+    _, _, _, k, _ = pool.shape
+    return P(None, None, None, "model" if _model_ok(mesh, k) else None, None)
+
+
 # sync/async-state entries that are genuinely per-worker (one EF/residual
 # accumulator per data shard) vs replicated scalars — see
 # `dist.train.init_dist_sync_state` / `dist.async_engine.init_async_state`

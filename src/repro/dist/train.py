@@ -237,9 +237,22 @@ def _greedy(logits) -> jax.Array:
 
 
 def make_prefill_step(cfg: ArchConfig, max_len: int,
-                      flags: TF.RunFlags = TF.DEFAULT_FLAGS):
+                      flags: TF.RunFlags = TF.DEFAULT_FLAGS, sample=None):
     """``(params, batch) -> (tokens (B,), cache)``: run the prompt, allocate
-    a ``max_len`` cache, emit the first greedy continuation token."""
+    a ``max_len`` cache, emit the first continuation token.
+
+    ``sample`` is an optional `repro.serve.sampling.SampleConfig`; None or a
+    greedy config keeps the exact legacy signature, a sampled config makes
+    the step ``(params, batch, key) -> ...``."""
+
+    if sample is not None and not sample.is_greedy:
+        from repro.serve.sampling import sample_tokens
+
+        def sampled_prefill_step(params, batch, key):
+            logits, cache = TF.prefill(cfg, params, batch, max_len, flags)
+            return sample_tokens(logits[:, -1, :], sample, key), cache
+
+        return sampled_prefill_step
 
     def prefill_step(params, batch):
         logits, cache = TF.prefill(cfg, params, batch, max_len, flags)
@@ -248,10 +261,23 @@ def make_prefill_step(cfg: ArchConfig, max_len: int,
     return prefill_step
 
 
-def make_decode_step(cfg: ArchConfig, flags: TF.RunFlags = TF.DEFAULT_FLAGS):
+def make_decode_step(cfg: ArchConfig, flags: TF.RunFlags = TF.DEFAULT_FLAGS,
+                     sample=None):
     """``(params, cache, tokens (B, 1)) -> (tokens (B,), cache)``: one
-    batched greedy decode step at position ``cache['pos']`` (donate the
-    cache — it is updated in place)."""
+    batched decode step at position ``cache['pos']`` (donate the cache — it
+    is updated in place).
+
+    ``sample`` as in :func:`make_prefill_step`: sampled configs add a
+    trailing ``key`` argument, greedy/None keeps the legacy signature."""
+
+    if sample is not None and not sample.is_greedy:
+        from repro.serve.sampling import sample_tokens
+
+        def sampled_decode_step(params, cache, tokens, key):
+            logits, cache = TF.decode_step(cfg, params, cache, tokens, flags)
+            return sample_tokens(logits[:, -1, :], sample, key), cache
+
+        return sampled_decode_step
 
     def decode_step(params, cache, tokens):
         logits, cache = TF.decode_step(cfg, params, cache, tokens, flags)

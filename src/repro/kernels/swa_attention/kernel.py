@@ -10,7 +10,13 @@ memory-roofline win on a workload that is purely HBM-bound.
 Grid: (B, KV_heads, T/BT) with the T dimension sequential ("arbitrary"),
 carrying running (max, denom, acc) in VMEM scratch across KV blocks.
 Window/causal masking is positional: block j covers keys
-[j*BT, j*BT + BT), valid iff pos - window < key <= pos.
+[base + j*BT, base + j*BT + BT), valid iff pos - window < key <= pos.
+
+Both ``pos`` and ``base`` may be per-sequence vectors: the paged serving
+engine (`repro.serve.engine`) hands the kernel a *window gather* of live
+pages per request, so each row's keys start at its own absolute position
+``base[b]`` and its query sits at its own ``pos[b]``.  Scalar ``pos`` (the
+dense single-position form) is still accepted and broadcast.
 """
 from __future__ import annotations
 
@@ -26,7 +32,7 @@ from repro.kernels.pltpu_compat import compiler_params
 NEG_INF = -1e30
 
 
-def _swa_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+def _swa_decode_kernel(pos_ref, base_ref, q_ref, k_ref, v_ref, o_ref,
                        m_scr, l_scr, acc_scr, *, block_t: int, window: int,
                        scale: float):
     j = pl.program_id(2)
@@ -39,11 +45,12 @@ def _swa_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
         acc_scr[...] = jnp.zeros_like(acc_scr[...])
 
     pos = pos_ref[0]
+    base = base_ref[0]
     q = q_ref[0, 0].astype(jnp.float32)                  # (G, D)
     k = k_ref[0, :, 0].astype(jnp.float32)               # (BT, D)
     v = v_ref[0, :, 0].astype(jnp.float32)               # (BT, D)
 
-    key_pos = j * block_t + jax.lax.broadcasted_iota(
+    key_pos = base + j * block_t + jax.lax.broadcasted_iota(
         jnp.int32, (1, block_t), 1)[0]
     valid = key_pos <= pos
     if window:
@@ -68,25 +75,31 @@ def _swa_decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
 @functools.partial(jax.jit, static_argnames=("window", "block_t",
                                              "interpret"))
 def swa_decode_attention(q: jax.Array, k_cache: jax.Array,
-                         v_cache: jax.Array, pos: jax.Array, *,
+                         v_cache: jax.Array, pos: jax.Array,
+                         base: jax.Array | None = None, *,
                          window: int = 0, block_t: int = 512,
                          interpret: bool = False) -> jax.Array:
     """q: (B, KV, G, D) one token per sequence (G = query heads per kv head);
-    k_cache/v_cache: (B, T, KV, D); pos: scalar int32 (current position —
-    keys at positions <= pos are live). Returns (B, KV, G, D)."""
+    k_cache/v_cache: (B, T, KV, D); pos: scalar or (B,) int32 (current
+    position(s) — keys at positions <= pos are live); base: optional (B,)
+    int32 absolute position of each row's key 0 (paged window gathers).
+    Returns (B, KV, G, D)."""
     b, nkv, g, d = q.shape
     t = k_cache.shape[1]
     bt = min(block_t, t)
     assert t % bt == 0, (t, bt)
     grid = (b, nkv, t // bt)
-    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (1,))
+    pos_arr = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    base_arr = (jnp.zeros((b,), jnp.int32) if base is None
+                else jnp.broadcast_to(jnp.asarray(base, jnp.int32), (b,)))
     kernel = functools.partial(_swa_decode_kernel, block_t=bt, window=window,
                                scale=d ** -0.5)
     return pl.pallas_call(
         kernel,
         grid=grid,
         in_specs=[
-            pl.BlockSpec((1,), lambda bi, hi, ti: (0,)),
+            pl.BlockSpec((1,), lambda bi, hi, ti: (bi,)),
+            pl.BlockSpec((1,), lambda bi, hi, ti: (bi,)),
             pl.BlockSpec((1, 1, g, d), lambda bi, hi, ti: (bi, hi, 0, 0)),
             pl.BlockSpec((1, bt, 1, d), lambda bi, hi, ti: (bi, ti, hi, 0)),
             pl.BlockSpec((1, bt, 1, d), lambda bi, hi, ti: (bi, ti, hi, 0)),
@@ -101,4 +114,4 @@ def swa_decode_attention(q: jax.Array, k_cache: jax.Array,
         interpret=interpret,
         compiler_params=compiler_params(
             dimension_semantics=("parallel", "parallel", "arbitrary")),
-    )(pos_arr, q, k_cache, v_cache)
+    )(pos_arr, base_arr, q, k_cache, v_cache)

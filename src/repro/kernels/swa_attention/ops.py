@@ -8,13 +8,14 @@ from repro.kernels.swa_attention.kernel import swa_decode_attention
 from repro.kernels.swa_attention.ref import swa_decode_ref
 
 
-def decode_attention(q, k_cache, v_cache, pos, *, window: int = 0,
+def decode_attention(q, k_cache, v_cache, pos, base=None, *, window: int = 0,
                      use_kernel: bool = True, interpret: bool = True):
     t = k_cache.shape[1]
     if use_kernel and t % 512 == 0:
-        return swa_decode_attention(q, k_cache, v_cache, pos, window=window,
-                                    interpret=interpret)
+        return swa_decode_attention(q, k_cache, v_cache, pos, base,
+                                    window=window, interpret=interpret)
     if use_kernel and t % 128 == 0:
-        return swa_decode_attention(q, k_cache, v_cache, pos, window=window,
-                                    block_t=128, interpret=interpret)
-    return swa_decode_ref(q, k_cache, v_cache, pos, window=window)
+        return swa_decode_attention(q, k_cache, v_cache, pos, base,
+                                    window=window, block_t=128,
+                                    interpret=interpret)
+    return swa_decode_ref(q, k_cache, v_cache, pos, base, window=window)

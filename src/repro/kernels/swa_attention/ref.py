@@ -5,17 +5,21 @@ import jax
 import jax.numpy as jnp
 
 
-def swa_decode_ref(q, k_cache, v_cache, pos, *, window: int = 0):
-    """q: (B, KV, G, D); caches (B, T, KV, D); pos scalar."""
+def swa_decode_ref(q, k_cache, v_cache, pos, base=None, *, window: int = 0):
+    """q: (B, KV, G, D); caches (B, T, KV, D); pos scalar or (B,); base
+    optional (B,) absolute position of each row's key 0."""
     b, nkv, g, d = q.shape
     t = k_cache.shape[1]
     s = jnp.einsum("bkgd,btkd->bkgt", q.astype(jnp.float32),
                    k_cache.astype(jnp.float32)) * (d ** -0.5)
-    key_pos = jnp.arange(t)
-    valid = key_pos <= pos
+    pos = jnp.broadcast_to(jnp.asarray(pos, jnp.int32), (b,))
+    base = (jnp.zeros((b,), jnp.int32) if base is None
+            else jnp.broadcast_to(jnp.asarray(base, jnp.int32), (b,)))
+    key_pos = base[:, None] + jnp.arange(t)[None]          # (B, T)
+    valid = key_pos <= pos[:, None]
     if window:
-        valid &= (pos - key_pos) < window
-    s = jnp.where(valid[None, None, None, :], s, -1e30)
+        valid &= (pos[:, None] - key_pos) < window
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return jnp.einsum("bkgt,btkd->bkgd", p,
                       v_cache.astype(jnp.float32)).astype(q.dtype)

@@ -1,49 +1,141 @@
-"""Serving driver: prefill a batch of prompts, then decode with batched
-one-token steps (the same serve_step the decode dry-run shapes lower).
+"""Serving driver: legacy batched loop or the continuous-batching engine.
 
+  # legacy loop (the parity oracle): one static batch, greedy decode
   python -m repro.launch.serve --arch qwen3-1.7b-smoke --prompt-len 32 \
       --gen 16 --batch 4
+
+  # continuous batching on the paged KV cache, mixed-length requests
+  python -m repro.launch.serve --arch qwen3-1.7b-smoke --engine continuous \
+      --prompt-lens 8,16,24,8 --gen 16 --devices 2
+
+The loop engine keeps every step's tokens on device and fetches ONCE at the
+end (`jnp.stack` then a single ``np.asarray``) — the old per-token
+``np.asarray`` blocked dispatch pipelining on exactly the workload serving
+cares about.  ``--temperature/--top-k`` switch both engines from greedy to
+sampled decoding (`repro.serve.sampling.SampleConfig`).
 """
 import argparse
+import os
 
 
-def main():
+def _parse():
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="qwen3-1.7b-smoke")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--engine", default="loop",
+                    choices=["loop", "continuous"])
+    ap.add_argument("--batch", type=int, default=4,
+                    help="loop: batch size; continuous: request slots")
     ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--prompt-lens", default="",
+                    help="continuous: comma list of per-request prompt "
+                         "lengths (default: --batch x --prompt-len)")
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--page-size", type=int, default=16)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices (set before jax init)")
     ap.add_argument("--seed", type=int, default=0)
-    args = ap.parse_args()
+    return ap.parse_args()
 
+
+def _run_loop(args, cfg, flags, params, sample):
     import jax
     import jax.numpy as jnp
     import numpy as np
 
-    from repro.configs import get_config
     from repro.data.pipeline import synthetic_batch
     from repro.dist.train import make_decode_step, make_prefill_step
+
+    max_len = args.prompt_len + args.gen
+    batch = synthetic_batch(cfg, args.batch, args.prompt_len, args.seed)
+    batch.pop("labels")
+    prefill = jax.jit(make_prefill_step(cfg, max_len, flags, sample))
+    decode = jax.jit(make_decode_step(cfg, flags, sample),
+                     donate_argnums=(1,))
+
+    key = jax.random.PRNGKey(args.seed + 1)
+    sampled = sample is not None and not sample.is_greedy
+
+    def split():
+        nonlocal key
+        key, sub = jax.random.split(key)
+        return sub
+
+    tok, cache = (prefill(params, batch, split()) if sampled
+                  else prefill(params, batch))
+    out = [tok]                     # device arrays; fetched once at the end
+    for _ in range(args.gen - 1):
+        tok, cache = (decode(params, cache, tok[:, None], split()) if sampled
+                      else decode(params, cache, tok[:, None]))
+        out.append(tok)
+    return np.asarray(jnp.stack(out, axis=1))     # ONE host sync
+
+
+def _run_continuous(args, cfg, flags, params, sample):
+    import numpy as np
+
+    from repro.serve import (ContinuousScheduler, PagedCacheConfig, Request,
+                             SampleConfig, StepEngine)
+
+    if args.prompt_lens:
+        lens = [int(s) for s in args.prompt_lens.split(",")]
+    else:
+        lens = [args.prompt_len] * args.batch
+    ps = args.page_size
+    per_req = -(-(max(lens) + args.gen) // ps)
+    pcfg = PagedCacheConfig(
+        page_size=ps, max_requests=min(args.batch, len(lens)),
+        max_pages_per_seq=per_req,
+        num_pages=sum(-(-(s + args.gen) // ps) for s in lens))
+    mesh = None
+    if args.devices > 1:
+        from repro.launch.mesh import make_host_mesh
+        mesh = make_host_mesh()
+    engine = StepEngine(cfg, params, pcfg, flags,
+                        sample=sample or SampleConfig(),
+                        mesh=mesh, seed=args.seed)
+    sched = ContinuousScheduler(engine, queue_limit=4 * len(lens))
+    rng = np.random.default_rng(args.seed)
+    trace = [Request(rid=i, max_new=args.gen, arrival=0,
+                     prompt=rng.integers(0, cfg.vocab_size, size=s,
+                                         dtype=np.int32))
+             for i, s in enumerate(lens)]
+    toks = sched.run(trace)
+    engine.alloc.check()
+    p50, p99 = sched.latency_percentiles()
+    print(f"continuous: {len(lens)} requests in {sched.clock} steps, "
+          f"p50={p50:.0f} p99={p99:.0f} latency steps, "
+          f"rejected={sched.rejected}")
+    return [toks[i] for i in range(len(lens))]
+
+
+def main():
+    args = _parse()
+    if args.devices:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    import jax
+
+    from repro.configs import get_config
     from repro.models import transformer as TF
     from repro.models.params import init_params
+    from repro.serve.sampling import SampleConfig
 
     cfg = get_config(args.arch)
     flags = TF.RunFlags(remat=False)
     params = init_params(TF.model_defs(cfg), jax.random.PRNGKey(args.seed))
-    max_len = args.prompt_len + args.gen
+    sample = (SampleConfig(temperature=args.temperature, top_k=args.top_k)
+              if args.temperature > 0 else None)
 
-    batch = synthetic_batch(cfg, args.batch, args.prompt_len, args.seed)
-    batch.pop("labels")
-    prefill = jax.jit(make_prefill_step(cfg, max_len, flags))
-    decode = jax.jit(make_decode_step(cfg, flags), donate_argnums=(1,))
-
-    tok, cache = prefill(params, batch)
-    out = [np.asarray(tok)]
-    for _ in range(args.gen - 1):
-        tok, cache = decode(params, cache, tok[:, None])
-        out.append(np.asarray(tok))
-    gen = np.stack(out, axis=1)
-    for i, row in enumerate(gen):
-        print(f"seq {i}: {row.tolist()}")
+    if args.engine == "loop":
+        gen = _run_loop(args, cfg, flags, params, sample)
+    else:
+        gen = _run_continuous(args, cfg, flags, params, sample)
+    for i, seq_tokens in enumerate(gen):
+        print(f"seq {i}: {list(map(int, seq_tokens))}")
     return gen
 
 

@@ -139,16 +139,13 @@ def gqa_attention(q, k, v, *, window: int = 0, chunk: int = 256,
     return out.reshape(b, s, h, d).astype(q.dtype)
 
 
-def attention_block(params, cfg, x, positions, *, window: int,
-                    kv_cache=None, cache_index=None):
-    """Full attention sub-block: qkv proj, rope, attention, out proj.
-
-    Training/prefill: kv_cache is None -> attends within x, returns (out, kv).
-    Decode: kv_cache = (k_cache, v_cache) of shape (B, T, K, D), x is
-    (B, 1, d) and cache_index the write position -> returns (out, new_cache).
-    """
+def project_qkv(params, cfg, x, positions):
+    """q/k/v projections + optional qk-norm + rope, shared by every
+    attention consumer (training/prefill/dense decode here, the paged
+    serving decode in `repro.serve.engine`) so their pre-attention math is
+    identical by construction.  x: (B, S, d); returns q (B,S,H,hd) and
+    k/v (B,S,K,hd)."""
     dt = x.dtype
-    hd = cfg.resolved_head_dim
     q = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt)),
                   "attn_q")
     k = constrain(jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(dt)),
@@ -160,6 +157,20 @@ def attention_block(params, cfg, x, positions, *, window: int,
         k = rmsnorm(k, params["k_norm"], cfg.norm_eps)
     q = apply_rope(q, positions, cfg.rope_theta)
     k = apply_rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(params, cfg, x, positions, *, window: int,
+                    kv_cache=None, cache_index=None):
+    """Full attention sub-block: qkv proj, rope, attention, out proj.
+
+    Training/prefill: kv_cache is None -> attends within x, returns (out, kv).
+    Decode: kv_cache = (k_cache, v_cache) of shape (B, T, K, D), x is
+    (B, 1, d) and cache_index the write position -> returns (out, new_cache).
+    """
+    dt = x.dtype
+    hd = cfg.resolved_head_dim
+    q, k, v = project_qkv(params, cfg, x, positions)
 
     if kv_cache is None:
         out = constrain(gqa_attention(q, k, v, window=window), "attn_q")

@@ -1,0 +1,9 @@
+"""repro.serve: continuous-batching inference on a paged KV cache, with
+staleness-bounded parameter replicas (the paper's elastic-consistency bound
+applied to serving-time parameter freshness)."""
+from repro.serve.engine import StepEngine, validate_paged_support  # noqa: F401
+from repro.serve.paged_cache import (PageAllocator,  # noqa: F401
+                                     PagedCacheConfig, init_page_pool)
+from repro.serve.replica import ParamReplica  # noqa: F401
+from repro.serve.sampling import SampleConfig, sample_tokens  # noqa: F401
+from repro.serve.scheduler import ContinuousScheduler, Request  # noqa: F401

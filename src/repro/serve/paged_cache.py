@@ -1,0 +1,173 @@
+"""Paged/block KV cache: fixed page pool + per-request page tables.
+
+The dense serving cache is ``(L, B, max_len, K, hd)`` — every request pays
+for the longest request's worth of KV slots up front.  The paged cache
+replaces it with a fixed pool of ``num_pages`` pages of ``page_size`` tokens
+each (vLLM-style), shared by all in-flight requests: a request holds only
+``ceil((prompt + max_new) / page_size)`` pages, so mixed-length traffic
+packs densely and admission capacity is a *page* budget, not a batch-slot
+budget.
+
+Layout
+------
+  * pools: k/v each ``(L, num_pages + 1, page_size, K, hd)``.  Page index
+    ``num_pages`` is the **scratch page**: inactive request slots route
+    their decode writes there (a jitted step always writes R rows; the
+    scratch page absorbs the garbage so no real page is ever corrupted).
+  * page table: ``(R, max_pages_per_seq)`` int32 per request slot; unused
+    entries point at the scratch page, so a full-table gather of an
+    inactive slot reads only trash that positional masking discards.
+  * allocation is host-side (`PageAllocator`): a free list with
+    all-or-nothing grants and double-free/leak detection — the device never
+    sees allocation state, only tables.
+
+Device ops here are *per layer* (the engine maps them over the layer dim
+inside its ``lax.scan``).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class PagedCacheConfig:
+    """Pool geometry. ``num_pages`` excludes the scratch page (the pool
+    arrays carry ``num_pages + 1`` pages)."""
+
+    page_size: int = 16
+    num_pages: int = 64
+    max_requests: int = 8        # request slots (R) in the jitted step
+    max_pages_per_seq: int = 16  # page-table width per slot
+
+    @property
+    def scratch_page(self) -> int:
+        return self.num_pages
+
+    @property
+    def tokens_capacity(self) -> int:
+        return self.num_pages * self.page_size
+
+    def pages_needed(self, total_len: int) -> int:
+        """Pages for a request of ``total_len = prompt + max_new`` tokens."""
+        n = -(-total_len // self.page_size)
+        if n > self.max_pages_per_seq:
+            raise ValueError(
+                f"request of {total_len} tokens needs {n} pages > "
+                f"max_pages_per_seq={self.max_pages_per_seq}")
+        return n
+
+
+def init_page_pool(n_layers: int, n_kv_heads: int, head_dim: int,
+                   pcfg: PagedCacheConfig, dtype=jnp.bfloat16):
+    """Zeroed (k_pages, v_pages), each (L, P+1, page_size, K, hd)."""
+    shape = (n_layers, pcfg.num_pages + 1, pcfg.page_size, n_kv_heads,
+             head_dim)
+    return jnp.zeros(shape, dtype), jnp.zeros(shape, dtype)
+
+
+class PageAllocator:
+    """Host-side free-list allocator with leak/double-free detection.
+
+    Grants are all-or-nothing: ``alloc`` returns None (and takes nothing)
+    when fewer than ``n`` pages are free, so a request never holds a partial
+    allocation the scheduler would have to unwind.
+    """
+
+    def __init__(self, pcfg: PagedCacheConfig):
+        self.pcfg = pcfg
+        self._free: list[int] = list(range(pcfg.num_pages))
+        self._owned: dict = {}
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, rid, n: int):
+        """Grant ``n`` pages to request ``rid``; None if not available."""
+        if rid in self._owned:
+            raise ValueError(f"request {rid!r} already holds pages")
+        if n <= 0:
+            raise ValueError(f"alloc of {n} pages")
+        if n > len(self._free):
+            return None
+        pages, self._free = self._free[:n], self._free[n:]
+        self._owned[rid] = pages
+        return list(pages)
+
+    def free(self, rid) -> int:
+        """Return ``rid``'s pages to the pool; raises on double-free."""
+        if rid not in self._owned:
+            raise ValueError(f"request {rid!r} holds no pages (double free?)")
+        pages = self._owned.pop(rid)
+        self._free.extend(pages)
+        return len(pages)
+
+    def check(self) -> None:
+        """Invariant: free + owned partition the pool (no leak, no dup)."""
+        seen = list(self._free)
+        for pages in self._owned.values():
+            seen.extend(pages)
+        assert sorted(seen) == list(range(self.pcfg.num_pages)), (
+            "page pool leak/duplication", sorted(seen))
+
+
+# ---------------------------------------------------------------------------
+# per-layer device ops (the engine vmaps/scans these over L)
+# ---------------------------------------------------------------------------
+
+def write_token_kv(pages: jax.Array, new: jax.Array, page_idx: jax.Array,
+                   offset: jax.Array) -> jax.Array:
+    """Scatter one token's KV per request slot into a (P+1, ps, K, hd) pool.
+
+    new: (R, K, hd); page_idx/offset: (R,).  Rows of inactive slots must
+    point page_idx at the scratch page (collisions there are harmless —
+    scratch contents are never read unmasked)."""
+    return pages.at[page_idx, offset].set(new.astype(pages.dtype))
+
+
+def gather_all(pages: jax.Array, table: jax.Array) -> jax.Array:
+    """Full-table gather: (P+1, ps, K, hd), (R, n) -> (R, n*ps, K, hd).
+
+    Token j of the result is absolute position j — with the table's pages
+    in order, this reproduces the dense cache layout exactly (the bitwise
+    parity path for full attention)."""
+    r, n = table.shape
+    out = pages[table]                       # (R, n, ps, K, hd)
+    return out.reshape(r, n * pages.shape[1], *pages.shape[2:])
+
+
+def window_slots(pos: jax.Array, window: int, pcfg: PagedCacheConfig,
+                 n_table: int):
+    """Which table slots a windowed decode read must touch.
+
+    For a query at ``pos`` the live keys are [pos-window+1, pos]: that span
+    crosses at most ``n_win = ceil(window / ps) + 1`` pages.  Returns
+    (start (R,), n_win) with start clipped so the static-width slice stays
+    in-table; the slice [start, start+n_win) always covers the window
+    (tokens below it are dead, tokens above ``pos`` are masked)."""
+    ps = pcfg.page_size
+    n_win = min(-(-window // ps) + 1, n_table)
+    start = jnp.clip(pos // ps - (n_win - 1), 0, n_table - n_win)
+    return start, n_win
+
+
+def gather_window(pages: jax.Array, table: jax.Array, start: jax.Array,
+                  n_win: int):
+    """Windowed gather: only ``n_win`` live pages per request.
+
+    Returns (keys (R, n_win*ps, K, hd), base (R,)) where ``base`` is the
+    absolute position of each row's token 0 — the kernel/oracle mask with
+    ``key_pos = base + j``."""
+    slots = jax.vmap(
+        lambda row, s: jax.lax.dynamic_slice_in_dim(row, s, n_win))(
+            table, start)                     # (R, n_win)
+    out = pages[slots]                        # (R, n_win, ps, K, hd)
+    r = table.shape[0]
+    ps = pages.shape[1]
+    return out.reshape(r, n_win * ps, *pages.shape[2:]), start * ps

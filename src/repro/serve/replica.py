@@ -1,0 +1,86 @@
+"""Bounded-staleness serving replica: params behind a `core.delivery` ring.
+
+The paper's elastic-consistency bound says SGD converges as long as the
+view each consumer reads lags the latest iterate by at most tau rounds.
+Serving mid-training is the same relaxation applied at inference: the
+trainer *publishes* each new parameter version into a version ring of
+capacity ``tau_serve + 1`` (`repro.core.delivery.tree_ring_put` — overwrite
+semantics, unlike the accumulating gradient rings), and the replica *serves*
+from a slot at most ``tau_serve`` versions behind.  The bound is enforced
+structurally: the ring only ever holds the last ``tau_serve + 1`` versions,
+and `refresh` clamps the serving version into that window, so
+``staleness <= tau_serve`` is an invariant, not a hope.
+
+Which version inside the window the replica serves is drawn from the same
+oblivious staleness schedules the async trainer uses
+(`delivery.make_tau_schedule`), so a serving run can replay the exact
+straggler/crash patterns the training-side experiments use (DROPPED entries
+mean "refresh missed entirely" and pin the replica at maximal allowed lag).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.core.delivery import (DROPPED, make_tau_schedule, tree_ring_init,
+                                 tree_ring_put, tree_ring_read)
+
+
+class ParamReplica:
+    """Version ring of parameter snapshots with a hard staleness cap."""
+
+    def __init__(self, params, tau_serve: int, *, schedule: str = "uniform",
+                 horizon: int = 1024, seed: int = 0):
+        if tau_serve < 0:
+            raise ValueError(f"tau_serve must be >= 0, got {tau_serve}")
+        self.tau_serve = tau_serve
+        self.capacity = tau_serve + 1
+        # version 0 = the params the replica was brought up with
+        self.rings = tree_ring_put(
+            tree_ring_init(self.capacity, params), 0, params)
+        self.latest_version = 0
+        self.serving_version = 0
+        lags = make_tau_schedule(schedule, 1, horizon, tau_serve, seed)[:, 0]
+        # DROPPED refresh = the replica missed the round: maximal legal lag
+        self._lags = np.where(lags == DROPPED, tau_serve, lags)
+        self._refreshes = 0
+
+    @property
+    def staleness(self) -> int:
+        return self.latest_version - self.serving_version
+
+    def publish(self, params, version: int | None = None) -> int:
+        """Trainer side: install a new version (defaults to latest + 1).
+
+        Overwrites the ring slot ``version % capacity`` — the version that
+        falls out of the window is exactly the one no replica may serve
+        anymore (it would exceed ``tau_serve``)."""
+        v = self.latest_version + 1 if version is None else version
+        if v != self.latest_version + 1:
+            raise ValueError(
+                f"publish must advance by 1: {self.latest_version} -> {v}")
+        self.rings = tree_ring_put(self.rings, v % self.capacity, params)
+        self.latest_version = v
+        # the slot just overwritten held v - capacity; if we were serving it,
+        # the floor below bumps us forward at the next read
+        self.serving_version = max(self.serving_version,
+                                   self.latest_version - self.tau_serve)
+        return v
+
+    def refresh(self) -> int:
+        """Replica side: pick the serving version for the next requests.
+
+        The scheduled lag is clamped into the legal window
+        ``[latest - tau_serve, latest]`` (and below by what was ever
+        published); serving never moves backwards."""
+        lag = int(self._lags[self._refreshes % len(self._lags)])
+        self._refreshes += 1
+        want = self.latest_version - min(lag, self.tau_serve)
+        self.serving_version = max(self.serving_version, want, 0)
+        return self.serving_version
+
+    def serving_params(self):
+        """The snapshot for ``serving_version`` (read, never consumed)."""
+        assert 0 <= self.staleness <= self.tau_serve, (
+            self.latest_version, self.serving_version)
+        return tree_ring_read(self.rings,
+                              self.serving_version % self.capacity)

@@ -1,0 +1,52 @@
+"""Token sampling policies for the serving path.
+
+Greedy is the default everywhere (``SampleConfig()`` is greedy), so the
+legacy decode tests and the paged-vs-dense parity oracle are untouched;
+temperature / top-k sampling is opt-in and threaded through both the legacy
+loop (`repro.dist.train.make_decode_step`) and the continuous engine
+(`repro.serve.engine.StepEngine`).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+@dataclass(frozen=True)
+class SampleConfig:
+    """temperature <= 0 means greedy (argmax); top_k == 0 means no top-k
+    truncation (sample the full distribution)."""
+
+    temperature: float = 0.0
+    top_k: int = 0
+
+    @property
+    def is_greedy(self) -> bool:
+        return self.temperature <= 0.0
+
+
+def greedy_tokens(logits: jax.Array) -> jax.Array:
+    """(B, V) logits -> (B,) int32 argmax tokens."""
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+
+
+def sample_tokens(logits: jax.Array, sc: SampleConfig,
+                  key: jax.Array | None = None) -> jax.Array:
+    """(B, V) last-position logits -> (B,) int32 tokens.
+
+    Greedy configs never touch ``key`` (callers may pass None); sampled
+    configs scale by temperature, optionally truncate to the top-k logits
+    (the rest masked to NEG_INF), and draw with ``jax.random.categorical``.
+    """
+    if sc.is_greedy:
+        return greedy_tokens(logits)
+    assert key is not None, "sampled decoding needs a PRNG key"
+    scaled = logits.astype(jnp.float32) / sc.temperature
+    if sc.top_k > 0 and sc.top_k < logits.shape[-1]:
+        kth = jnp.sort(scaled, axis=-1)[:, -sc.top_k][:, None]
+        scaled = jnp.where(scaled >= kth, scaled, NEG_INF)
+    return jax.random.categorical(key, scaled, axis=-1).astype(jnp.int32)

@@ -58,8 +58,10 @@ def test_train_symbols_and_signatures():
     assert params_of(DT.init_dist_sync_state) == ["scfg", "mesh",
                                                   "params_like"]
     assert params_of(SH.sync_state_specs) == ["sync_state", "pspecs", "mesh"]
-    assert params_of(DT.make_prefill_step) == ["cfg", "max_len", "flags"]
-    assert params_of(DT.make_decode_step) == ["cfg", "flags"]
+    assert params_of(DT.make_prefill_step) == ["cfg", "max_len", "flags",
+                                               "sample"]
+    assert params_of(DT.make_decode_step) == ["cfg", "flags", "sample"]
+    assert params_of(SH.paged_cache_specs) == ["cfg", "mesh", "pool"]
 
 
 def test_async_engine_symbols_and_signatures():
