@@ -1,0 +1,201 @@
+"""Fault-injection acceptance + overhead: the runtime counterpart of the
+paper's crash relaxations.
+
+Emitted rows:
+
+  * ``accept/fault_recovery_parity`` — a `repro.launch.supervisor` run whose
+    fault plan SIGKILLs the trainer mid-run must restart from the latest
+    valid checkpoint and produce, step for step, the SAME loss trajectory
+    as one uninterrupted run of the same plan (the oracle: identical flags
+    with ``--fault-attempt 1``, so the attempt-0 kill never fires).
+    Everything is deterministic in (seed, step) — data, tau tables, delay
+    rings, cross-process param init — so the trajectories must agree to
+    float-print precision.
+  * ``accept/fault_overhead`` — the fault machinery with an EMPTY plan
+    attached (per-step host-side event lookups; the jitted program is
+    unchanged) must cost < 2% steps/s against the same loop with no
+    injector at all.
+
+The training loops run in subprocesses (XLA_FLAGS device forcing, and the
+SIGKILL must kill a child, not the bench harness); children print
+``BENCHROW|name|us|derived`` lines the parent converts to rows.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+from benchmarks.common import row
+
+SMOKE = bool(os.environ.get("BENCH_SIM_SMOKE"))
+STEPS = 10 if SMOKE else 16
+KILL_AT = 6 if SMOKE else 9
+CKPT_EVERY = 4
+OVH_STEPS = 12 if SMOKE else 40
+
+_SRC = os.path.abspath(os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def _env(devices: int = 0):
+    env = dict(os.environ)
+    env["PYTHONPATH"] = _SRC + os.pathsep + env.get("PYTHONPATH", "")
+    env.pop("XLA_FLAGS", None)
+    if devices:
+        env["XLA_FLAGS"] = \
+            f"--xla_force_host_platform_device_count={devices}"
+    return env
+
+
+def _losses_by_step(out: str) -> dict:
+    """``step N loss X`` lines; last occurrence per step wins (the restarted
+    attempt replays the steps since its checkpoint)."""
+    losses = {}
+    for line in out.splitlines():
+        if line.startswith("step"):
+            parts = line.split()
+            losses[int(parts[1])] = float(parts[3])
+    return losses
+
+
+def _recovery_rows() -> list:
+    import tempfile
+
+    from repro.faults import FaultEvent, FaultPlan
+
+    with tempfile.TemporaryDirectory() as tmp:
+        plan = os.path.join(tmp, "plan.json")
+        FaultPlan(events=(FaultEvent(step=KILL_AT, kind="kill"),)).save(plan)
+        train = ["--arch", "qwen3-1.7b-smoke", "--steps", str(STEPS),
+                 "--batch", "8", "--seq", "32", "--lr", "0.02",
+                 "--sync", "async", "--devices", "2", "--tau-max", "2",
+                 "--async-schedule", "roundrobin", "--log-every", "1",
+                 "--ckpt-every", str(CKPT_EVERY)]
+        t0 = time.perf_counter()
+        sup = subprocess.run(
+            [sys.executable, "-m", "repro.launch.supervisor",
+             "--max-restarts", "2", "--backoff", "0.1",
+             "--fault-plan", plan, "--",
+             *train, "--ckpt-dir", os.path.join(tmp, "ckpt")],
+            env=_env(), capture_output=True, text=True, timeout=1800,
+            cwd=os.path.dirname(_SRC))
+        dt = time.perf_counter() - t0
+        if sup.returncode != 0:
+            raise RuntimeError(f"supervised run failed:\n{sup.stdout[-2000:]}"
+                               f"\n{sup.stderr[-2000:]}")
+        oracle = subprocess.run(
+            [sys.executable, "-m", "repro.launch.train", *train,
+             "--ckpt-dir", os.path.join(tmp, "ckpt_oracle"),
+             "--fault-plan", plan, "--fault-attempt", "1"],
+            env=_env(), capture_output=True, text=True, timeout=1800,
+            cwd=os.path.dirname(_SRC))
+        if oracle.returncode != 0:
+            raise RuntimeError(f"oracle run failed:\n{oracle.stdout[-2000:]}"
+                               f"\n{oracle.stderr[-2000:]}")
+    got, want = _losses_by_step(sup.stdout), _losses_by_step(oracle.stdout)
+    killed = "fault: SIGKILL" in sup.stdout
+    resumed = "resumed from step" in sup.stdout
+    diff = max((abs(got[t] - want[t]) for t in want if t in got),
+               default=float("inf"))
+    complete = set(got) == set(want) == set(range(STEPS))
+    ok = killed and resumed and complete and diff <= 1e-4
+    status = "OK" if ok else "FAIL"
+    return [row(
+        "accept/fault_recovery_parity", dt * 1e6 / STEPS,
+        f"SIGKILL@{KILL_AT} restarted={resumed} max|dloss|={diff:.2e} "
+        f"<=1e-4 vs uninterrupted oracle over {STEPS} steps: {status}")]
+
+
+def _overhead_child() -> None:
+    import jax
+    from jax.sharding import NamedSharding
+
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.dist import sharding as SH
+    from repro.dist.async_engine import (AsyncConfig, init_async_state,
+                                         make_async_train_step)
+    from repro.faults import FaultPlan, TrainFaultInjector
+    from repro.launch.mesh import make_host_mesh
+    from repro.models import transformer as TF
+    from repro.models.params import init_params, param_specs
+    from repro.optim import momentum
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    mesh = make_host_mesh()
+    flags = TF.RunFlags(remat=False)
+    defs = TF.model_defs(cfg)
+    pspecs = param_specs(defs, SH.axis_sizes(mesh))
+    params0 = init_params(defs, jax.random.PRNGKey(0))
+    opt = momentum(0.02, 0.9)
+    data = SyntheticLMDataset(cfg.vocab_size, 32, 8, seed=0)
+
+    def shard_batch(b):
+        return {k: jax.device_put(
+                    v, NamedSharding(mesh, SH.batch_spec(mesh, v.shape[0])))
+                for k, v in b.items()}
+
+    batches = [shard_batch(data.batch(t)) for t in range(OVH_STEPS)]
+    acfg = AsyncConfig(tau_max=2, schedule="uniform", horizon=OVH_STEPS,
+                       track_gap=False)
+    astep = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
+                                          flags))
+
+    def train(injector):
+        params, opt_state = params0, opt.init(params0)
+        state = init_async_state(acfg, mesh, params0)
+        jax.block_until_ready(astep(params, opt_state, state, batches[0]))
+        t0 = time.perf_counter()
+        for t, b in enumerate(batches):
+            params, opt_state, state, m = astep(params, opt_state, state, b)
+            if injector is not None:
+                # exactly launch.train's per-step host work for a plan with
+                # nothing scheduled: event lookups + the kill check
+                injector.check_ckpt_io(t + 1)
+                injector.maybe_kill(t)
+        jax.block_until_ready(params)
+        return time.perf_counter() - t0
+
+    # interleave the two variants and keep each one's best time, so a
+    # scheduling hiccup cannot fake (or hide) a regression
+    base_dt = inj_dt = float("inf")
+    for _ in range(3):
+        base_dt = min(base_dt, train(None))
+        inj_dt = min(inj_dt, train(TrainFaultInjector(FaultPlan())))
+    overhead = inj_dt / base_dt - 1.0
+    status = "OK" if overhead < 0.02 else "FAIL"
+    print(f"BENCHROW|accept/fault_overhead|{inj_dt / OVH_STEPS * 1e6:.1f}|"
+          f"empty-plan injector {overhead * 100:+.2f}% steps/s vs no "
+          f"injector ({OVH_STEPS / inj_dt:.1f} vs {OVH_STEPS / base_dt:.1f}"
+          f" steps/s) <2%: {status}", flush=True)
+
+
+def _overhead_rows() -> list:
+    r = subprocess.run(
+        [sys.executable, "-m", "benchmarks.bench_faults", "--child"],
+        env=_env(devices=2), capture_output=True, text=True, timeout=3600,
+        cwd=os.path.dirname(_SRC))
+    if r.returncode != 0:
+        raise RuntimeError(f"bench_faults child failed:\n{r.stdout[-2000:]}"
+                           f"\n{r.stderr[-2000:]}")
+    rows = []
+    for line in r.stdout.splitlines():
+        if line.startswith("BENCHROW|"):
+            _, name, us, derived = line.split("|", 3)
+            rows.append(row(name, float(us), derived))
+    if not rows:
+        raise RuntimeError(f"no BENCHROW output:\n{r.stdout[-2000:]}")
+    return rows
+
+
+def run() -> list:
+    return _recovery_rows() + _overhead_rows()
+
+
+if __name__ == "__main__":
+    if "--child" in sys.argv:
+        _overhead_child()
+    else:
+        from benchmarks.common import print_rows
+        print_rows(run())

@@ -113,7 +113,8 @@ def _parity_rows(cfg, flags, params):
     ok = "OK" if bad == 0 else "FAIL"
     return [row("accept/serve_paged_parity", dt * 1e6 / max(sched.clock, 1),
                 f"mismatched_tokens={bad} over {len(lens)} mixed-length "
-                f"staggered requests: {ok}")]
+                f"staggered requests "
+                f"rejected_frac={sched.stats()['rejected_frac']:.3f}: {ok}")]
 
 
 def _throughput_rows(cfg, flags, params):
@@ -178,7 +179,8 @@ def _throughput_rows(cfg, flags, params):
         row("accept/serve_continuous_vs_static", cont_s * 1e6,
             f"continuous={cont_tps:.1f} static={stat_tps:.1f} tok/s "
             f"({sched.clock} vs {static_steps} steps, {useful} useful "
-            f"tokens): {ok}"),
+            f"tokens, rejected_frac="
+            f"{sched.stats()['rejected_frac']:.3f}): {ok}"),
         row("serve/p50_latency_steps", p50, f"continuous, {n_req} requests"),
         row("serve/p99_latency_steps", p99, f"continuous, {n_req} requests"),
         row("serve/static_p50_latency_steps", sp50,
@@ -220,7 +222,8 @@ def _replica_rows(cfg, flags, params):
     ok = "OK" if worst <= TAU_SERVE else "FAIL"
     return [row("accept/serve_replica_staleness", dt * 1e6 / len(seen),
                 f"max_staleness={worst} tau_serve={TAU_SERVE} over "
-                f"{version} published versions: {ok}")]
+                f"{version} published versions "
+                f"rejected_frac={sched.stats()['rejected_frac']:.3f}: {ok}")]
 
 
 def _decode_step_rows(cfg, flags, params):

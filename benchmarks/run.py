@@ -25,6 +25,7 @@ MODULES = [
     "benchmarks.bench_async_ef",
     "benchmarks.bench_kernels",
     "benchmarks.bench_serve",
+    "benchmarks.bench_faults",
     "benchmarks.bench_roofline",
 ]
 

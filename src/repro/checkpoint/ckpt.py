@@ -4,15 +4,36 @@ Arrays are gathered to host and written atomically; restore rebuilds the
 pytree and (optionally) re-shards onto a mesh via ``jax.device_put`` with the
 provided shardings. Format: one ``step_<N>.npz`` per step with flattened
 ``"<idx>"`` keys plus a pickled treedef sidecar.
+
+Crash ordering: the treedef sidecar is replaced into place *before* the
+``.npz`` — a kill between the two leaves a sidecar without arrays, which
+``latest_step`` (keyed on the ``.npz``) never even sees.  The reverse order
+would leave an ``.npz`` whose restore dies on the missing sidecar, which is
+exactly the torn state ``latest_step`` additionally skips-and-warns on (a
+checkpoint from before this ordering existed, or a sidecar lost to the
+filesystem).
 """
 from __future__ import annotations
 
 import os
 import pickle
 import tempfile
+import warnings
 
 import jax
 import numpy as np
+
+
+def _atomic_replace(dirname: str, path: str, write_fn) -> None:
+    fd, tmp = tempfile.mkstemp(dir=dirname, suffix=".tmp")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            write_fn(f)
+        os.replace(tmp, path)
+    except BaseException:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+        raise
 
 
 def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
@@ -20,28 +41,51 @@ def save_checkpoint(ckpt_dir: str, step: int, tree) -> str:
     leaves, treedef = jax.tree.flatten(tree)
     arrays = {str(i): np.asarray(jax.device_get(x)) for i, x in enumerate(leaves)}
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    with os.fdopen(fd, "wb") as f:
-        np.savez(f, **arrays)
-    os.replace(tmp, path)
-    with open(path + ".treedef", "wb") as f:
-        pickle.dump(treedef, f)
+    # sidecar FIRST: once the .npz lands, its manifest already exists
+    _atomic_replace(ckpt_dir, path + ".treedef",
+                    lambda f: pickle.dump(treedef, f))
+    _atomic_replace(ckpt_dir, path, lambda f: np.savez(f, **arrays))
     return path
 
 
+def _sidecar_readable(path: str) -> bool:
+    try:
+        with open(path + ".treedef", "rb") as f:
+            pickle.load(f)
+        return True
+    except Exception:
+        return False
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step whose checkpoint is actually loadable.  Checkpoints
+    missing a readable treedef sidecar (torn write, lost file) are skipped
+    with a warning instead of poisoning the resume."""
     if not os.path.isdir(ckpt_dir):
         return None
-    steps = [int(f[len("step_"):-len(".npz")])
-             for f in os.listdir(ckpt_dir)
-             if f.startswith("step_") and f.endswith(".npz")]
+    steps = []
+    for f in sorted(os.listdir(ckpt_dir)):
+        if not (f.startswith("step_") and f.endswith(".npz")):
+            continue
+        step = int(f[len("step_"):-len(".npz")])
+        if _sidecar_readable(os.path.join(ckpt_dir, f)):
+            steps.append(step)
+        else:
+            warnings.warn(
+                f"skipping checkpoint {f}: missing/unreadable treedef "
+                f"sidecar (torn write?)", stacklevel=2)
     return max(steps) if steps else None
 
 
 def load_checkpoint(ckpt_dir: str, step: int, shardings=None):
     path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    with open(path + ".treedef", "rb") as f:
-        treedef = pickle.load(f)
+    try:
+        with open(path + ".treedef", "rb") as f:
+            treedef = pickle.load(f)
+    except Exception as e:
+        raise FileNotFoundError(
+            f"checkpoint {path} has no readable treedef sidecar ({e}); "
+            f"resume via latest_step() to skip torn checkpoints") from e
     data = np.load(path)
     leaves = [data[str(i)] for i in range(len(data.files))]
     tree = jax.tree.unflatten(treedef, leaves)

@@ -43,7 +43,8 @@ import numpy as np
 DROPPED = -1
 
 #: Named staleness schedules understood by :func:`make_tau_schedule`.
-TAU_SCHEDULES = ("constant", "uniform", "roundrobin", "straggler", "crash")
+TAU_SCHEDULES = ("constant", "uniform", "roundrobin", "straggler", "crash",
+                 "rejoin")
 
 
 # ---------------------------------------------------------------------------
@@ -138,6 +139,10 @@ def make_tau_schedule(schedule: str, p: int, T: int, tau_max: int,
       straggler  : the last worker always at ``tau_max``, the rest at 0
       crash      : uniform delays, but the last ``max(1, p // 4)`` workers
                    crash at ``T // 2`` (DROPPED from then on)
+      rejoin     : like ``crash`` but recovery is modeled too — the same
+                   workers crash at ``T // 3`` and come back at
+                   ``max(T // 3 + 1, (2 * T) // 3)``, resuming uniform
+                   delays (DROPPED only inside the outage window)
     """
     if tau_max < 0:
         raise ValueError(f"tau_max must be >= 0, got {tau_max}")
@@ -157,6 +162,13 @@ def make_tau_schedule(schedule: str, p: int, T: int, tau_max: int,
         n_crash = max(1, p // 4) if p > 1 else 0
         if n_crash:
             taus[T // 2:, p - n_crash:] = DROPPED
+    elif schedule == "rejoin":
+        taus = rng.integers(0, tau_max + 1, size=(T, p))
+        n_crash = max(1, p // 4) if p > 1 else 0
+        if n_crash:
+            down = T // 3
+            back = max(down + 1, (2 * T) // 3)
+            taus[down:back, p - n_crash:] = DROPPED
     else:
         raise ValueError(
             f"unknown tau schedule {schedule!r}; one of {TAU_SCHEDULES}")
@@ -184,6 +196,13 @@ def delivery_tensors(kind: str, p: int, T: int, per_step: dict,
         alive = crash_step[None, :] >= ts                # (T, p)
         crashing = crash_step[None, :] == ts
         new_alive = alive & ~crashing
+        if "rejoin_step" in per_run:
+            # crashed workers re-enter at rejoin_step (> crash_step; use
+            # >= T for "never"): they rejoin the sender AND receiver sets,
+            # so the conservation laws below must hold across re-entry too
+            rejoined = ts >= per_run["rejoin_step"][None, :]
+            alive = alive | rejoined
+            new_alive = new_alive | rejoined
         base = alive[:, :, None] & alive[:, None, :]
         heard = (per_run["hear_u"].T[None] < 0.5) \
             & new_alive[:, :, None] & ~eye[None]

@@ -53,11 +53,11 @@ from repro.core import delivery as DLV
 from repro.core.scheduler import ef_compress_leaf
 from repro.dist.sharding import (batch_shard_specs, replicated_specs,
                                  shard_state_specs)
-from repro.dist.train import add_worker_dim, mean_grads, squeeze_worker_dim
+from repro.dist.train import (add_worker_dim, guarded_update, mean_grads,
+                              squeeze_worker_dim, tree_all_finite)
 from repro.jax_compat import shard_map
 from repro.models import transformer as TF
 from repro.models import scan_utils as SU
-from repro.optim import apply_updates
 
 
 @dataclass(frozen=True)
@@ -78,6 +78,8 @@ class AsyncConfig:
     horizon: int = 1024           # tau schedule table length
     seed: int = 0                 # schedule RNG (oblivious adversary)
     track_gap: bool = True        # stale_gap2 metric costs a 2nd pmean
+    crash_subst: bool = False     # renormalize dead-worker mass (see below)
+    skip_nonfinite: bool = False  # drop NaN/Inf gradients + skip the step
 
     @property
     def capacity(self) -> int:
@@ -128,10 +130,31 @@ def make_async_train_step(cfg: ArchConfig, opt, mesh, acfg: AsyncConfig,
     ``async_state`` must use the :func:`init_async_state` layout.  Metrics:
     ``loss`` (mean over workers), ``stale_gap2`` (||applied - fresh mean
     gradient||^2 — zero when ``tau_max == 0``, the engine's realized
-    staleness gap) and ``mean_tau`` (mean effective delay this step).
+    staleness gap), ``mean_tau`` (mean effective delay this step) and
+    ``nonfinite`` (0/1: the step was skipped by the non-finite guard).
     The gap needs a second full-gradient pmean, so it is only computed when
     ``acfg.track_gap`` — turn it off to keep the hot path at exactly the
     synchronous all-reduce volume (the metric then reports 0).
+
+    Fault tolerance (both off by default — the hot path is byte-identical
+    to the unguarded program):
+
+      * ``acfg.crash_subst`` — the paper's crash-with-substitution
+        semantics as mass *renormalization*: ``pmean`` divides by all ``n``
+        workers even when crashed/delayed workers delivered nothing, so
+        dead mass shrinks the effective step and a fully-crashed step still
+        "applies" a zero gradient.  With the flag on, the applied mean is
+        rescaled by ``n / delivered(t)`` (computable from the replicated
+        tau table alone — the adversary is oblivious), so surviving
+        workers' gradients carry full weight and training continues at the
+        intended step size instead of stalling; ``delivered(t) == 0`` steps
+        apply nothing.
+      * ``acfg.skip_nonfinite`` — a worker whose local gradient has NaN/Inf
+        leaves transmits *zeros* (its mass is dropped for that step, like a
+        one-step crash — EF residuals keep draining but never absorb the
+        poison), and the optimizer update is additionally guarded by
+        `repro.dist.train.guarded_update` so a poisoned mean never reaches
+        the params.
     """
     from jax.sharding import PartitionSpec as P
 
@@ -172,6 +195,16 @@ def make_async_train_step(cfg: ArchConfig, opt, mesh, acfg: AsyncConfig,
         alive = (tau >= 0).astype(jnp.float32)     # DROPPED == crashed
         d_eff = jnp.clip(tau, 0, acfg.tau_max)
 
+        # poisoned local gradient -> transmit nothing (a one-step crash);
+        # zeroing BEFORE compression keeps the EF residual finite forever
+        if acfg.skip_nonfinite:
+            g_finite = tree_all_finite(grads)
+            grads = jax.tree.map(
+                lambda g: jnp.where(g_finite, g, jnp.zeros_like(g)), grads)
+            local_bad = 1.0 - g_finite.astype(jnp.float32)
+        else:
+            local_bad = jnp.zeros(())
+
         # local sparsification before "transmission"
         if acfg.compressor != "none":
             err = local["err"] if acfg.has_err else jax.tree.map(
@@ -192,6 +225,20 @@ def make_async_train_step(cfg: ArchConfig, opt, mesh, acfg: AsyncConfig,
 
         # the shared model applies the mean of everything delivered at t
         synced = pmean(stale)
+        if acfg.crash_subst:
+            # delivered(t): how many messages land this step, read off the
+            # replicated tau table (a message from step t-d with tau == d
+            # arrives now).  Static unroll over the d <= tau_max window.
+            tab = local["taus"]
+            horizon = tab.shape[0]
+            cnt = jnp.zeros((), jnp.float32)
+            for d in range(cap):
+                src = step - d
+                cnt += jnp.sum(((tab[src % horizon] == d) & (src >= 0))
+                               .astype(jnp.float32))
+            n_total = jnp.float32(tab.shape[1])
+            scale = jnp.where(cnt > 0, n_total / cnt, 0.0)
+            synced = jax.tree.map(lambda a: a * scale, synced)
         if acfg.track_gap:
             fresh = pmean(grads)
             gap2 = sum(jnp.sum(jnp.square(a - b)) for a, b in
@@ -199,14 +246,19 @@ def make_async_train_step(cfg: ArchConfig, opt, mesh, acfg: AsyncConfig,
         else:
             gap2 = jnp.zeros(())
 
-        updates, opt_state = opt.update(synced, opt_state, params)
-        params = apply_updates(params, updates)
+        params, opt_state, _skipped = guarded_update(
+            opt, synced, opt_state, params,
+            skip_nonfinite=acfg.skip_nonfinite)
         local["step"] = step + 1
         metrics = {
             "loss": jax.lax.pmean(loss, axis_name=manual),
             "stale_gap2": gap2,
             "mean_tau": jax.lax.pmean(d_eff.astype(jnp.float32),
                                       axis_name=manual),
+            # fraction of workers whose local gradient was poisoned this
+            # step (the launcher's skipped-step counter); the delivered
+            # mean itself is re-guarded above
+            "nonfinite": jax.lax.pmean(local_bad, axis_name=manual),
         }
         return params, opt_state, add_worker_dim(local), metrics
 
@@ -216,7 +268,8 @@ def make_async_train_step(cfg: ArchConfig, opt, mesh, acfg: AsyncConfig,
                     batch_shard_specs(batch, head))
         out_specs = (replicated_specs(params), replicated_specs(opt_state),
                      shard_state_specs(state, head),
-                     {"loss": P(), "stale_gap2": P(), "mean_tau": P()})
+                     {"loss": P(), "stale_gap2": P(), "mean_tau": P(),
+                      "nonfinite": P()})
         fn = shard_map(local_step, mesh, in_specs, out_specs,
                        check=False, auto=auto)
         return fn(params, opt_state, state, batch)

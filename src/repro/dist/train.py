@@ -48,12 +48,20 @@ def loss_fn(cfg: ArchConfig, params, batch: dict,
 
     Returns ``(loss, metrics)`` where metrics carries the unweighted parts;
     differentiable in ``params`` (use with ``value_and_grad(has_aux=True)``).
+
+    An optional ``batch["loss_scale"]`` (shape (B,), normally all-ones)
+    multiplies the loss — the fault-injection channel: a NaN/Inf scale
+    poisons every gradient leaf, which the ``skip_nonfinite`` guard must
+    then reject (`repro.faults`).  Shaped (B,) rather than scalar so the
+    batch stays uniformly shardable over the data axes.
     """
     logits, aux = TF.forward(cfg, params, batch, flags)
     logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
     nll = -jnp.take_along_axis(logp, batch["labels"][..., None], axis=-1)
     ce = jnp.mean(nll)
     loss = ce + cfg.router_aux_weight * aux
+    if "loss_scale" in batch:
+        loss = loss * jnp.mean(batch["loss_scale"].astype(jnp.float32))
     return loss, {"ce": ce, "aux_loss": aux}
 
 
@@ -96,21 +104,59 @@ def mean_grads(cfg, flags, params, batch, grad_accum: int):
 
 
 # ---------------------------------------------------------------------------
+# non-finite gradient guard (fault tolerance)
+# ---------------------------------------------------------------------------
+
+def tree_all_finite(tree) -> jax.Array:
+    """Scalar bool: every leaf of ``tree`` is finite everywhere."""
+    checks = [jnp.all(jnp.isfinite(l)) for l in jax.tree.leaves(tree)]
+    out = checks[0]
+    for c in checks[1:]:
+        out = jnp.logical_and(out, c)
+    return out
+
+
+def guarded_update(opt, grads, opt_state, params, *, skip_nonfinite: bool):
+    """Optimizer update with an optional skip-step guard: when
+    ``skip_nonfinite`` and any gradient leaf is NaN/Inf, params and
+    optimizer state pass through unchanged (the poisoned step is dropped,
+    not applied).  Returns ``(params, opt_state, nonfinite)`` where
+    ``nonfinite`` is the 0/1 skip indicator (a counter metric for the
+    launcher).  With the guard off the program is exactly the unguarded
+    update — no finiteness reduction is traced."""
+    updates, new_opt = opt.update(grads, opt_state, params)
+    new_params = apply_updates(params, updates)
+    if not skip_nonfinite:
+        return new_params, new_opt, jnp.zeros(())
+    finite = tree_all_finite(grads)
+    sel = lambda new, old: jnp.where(finite, new, old)  # noqa: E731
+    return (jax.tree.map(sel, new_params, params),
+            jax.tree.map(sel, new_opt, opt_state),
+            1.0 - finite.astype(jnp.float32))
+
+
+# ---------------------------------------------------------------------------
 # training steps
 # ---------------------------------------------------------------------------
 
 def make_train_step(cfg: ArchConfig, opt, flags: TF.RunFlags = TF.DEFAULT_FLAGS,
-                    grad_accum: int = 1):
+                    grad_accum: int = 1, *, skip_nonfinite: bool = False):
     """Exact-sync step: ``(params, opt_state, batch) -> (params, opt_state,
     metrics)``. Pure single-program data parallelism — when the batch is
     sharded over the data axes, GSPMD inserts the dense gradient all-reduce
-    (the BytePS-semantics baseline every relaxation is compared against)."""
+    (the BytePS-semantics baseline every relaxation is compared against).
+
+    ``skip_nonfinite`` arms the :func:`guarded_update` skip-step guard and
+    adds a ``nonfinite`` 0/1 metric; off (the default) the program is
+    unchanged."""
 
     def step(params, opt_state, batch):
         loss, parts, grads = mean_grads(cfg, flags, params, batch, grad_accum)
-        updates, opt_state = opt.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
+        params, opt_state, nonfinite = guarded_update(
+            opt, grads, opt_state, params, skip_nonfinite=skip_nonfinite)
         metrics = {"loss": loss, "grad_norm": global_norm(grads), **parts}
+        if skip_nonfinite:
+            metrics["nonfinite"] = nonfinite
         return params, opt_state, metrics
 
     return step

@@ -1,0 +1,17 @@
+"""Deterministic fault injection + supervision for training and serving.
+
+`repro.faults.plan` is the seeded, replayable `FaultPlan` DSL (worker
+crash/rejoin, NaN/Inf gradient poisoning, delayed/dropped ring deposits,
+checkpoint-IO errors, SIGKILLs, serve-side logit poisoning and page-pool
+exhaustion); `repro.faults.inject` holds the host-side injectors that
+drive a plan through `launch.train` and `launch.serve`.  The supervisor
+that restarts killed runs lives in `repro.launch.supervisor`.
+"""
+from repro.faults.plan import (FAULT_KINDS, SERVE_KINDS, TAU_KINDS,
+                               FaultEvent, FaultPlan)
+from repro.faults.inject import ServeFaultInjector, TrainFaultInjector
+
+__all__ = [
+    "FAULT_KINDS", "SERVE_KINDS", "TAU_KINDS", "FaultEvent", "FaultPlan",
+    "ServeFaultInjector", "TrainFaultInjector",
+]

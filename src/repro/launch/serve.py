@@ -36,6 +36,10 @@ def _parse():
     ap.add_argument("--devices", type=int, default=0,
                     help="force N host devices (set before jax init)")
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--fault-plan", default="",
+                    help="continuous engine: repro.faults plan (path or "
+                         "inline JSON) — logit_poison/page_exhaust events "
+                         "drive the quarantine/backpressure paths")
     return ap.parse_args()
 
 
@@ -92,22 +96,37 @@ def _run_continuous(args, cfg, flags, params, sample):
     if args.devices > 1:
         from repro.launch.mesh import make_host_mesh
         mesh = make_host_mesh()
+    plan = injector = None
+    if args.fault_plan:
+        from repro.faults import FaultPlan, ServeFaultInjector
+        plan = FaultPlan.load(args.fault_plan)
     engine = StepEngine(cfg, params, pcfg, flags,
                         sample=sample or SampleConfig(),
-                        mesh=mesh, seed=args.seed)
-    sched = ContinuousScheduler(engine, queue_limit=4 * len(lens))
+                        mesh=mesh, seed=args.seed,
+                        check_finite=plan is not None
+                        and "logit_poison" in plan.kinds())
+    if plan is not None:
+        injector = ServeFaultInjector(plan, engine)
+    sched = ContinuousScheduler(
+        engine, queue_limit=4 * len(lens),
+        quarantine=plan is not None,
+        on_tick=injector.on_tick if injector else None)
     rng = np.random.default_rng(args.seed)
     trace = [Request(rid=i, max_new=args.gen, arrival=0,
                      prompt=rng.integers(0, cfg.vocab_size, size=s,
                                          dtype=np.int32))
              for i, s in enumerate(lens)]
     toks = sched.run(trace)
+    if injector is not None:
+        injector.release_all()
     engine.alloc.check()
-    p50, p99 = sched.latency_percentiles()
+    st = sched.stats()
     print(f"continuous: {len(lens)} requests in {sched.clock} steps, "
-          f"p50={p50:.0f} p99={p99:.0f} latency steps, "
-          f"rejected={sched.rejected}")
-    return [toks[i] for i in range(len(lens))]
+          f"p50={st['p50']:.0f} p99={st['p99']:.0f} latency steps, "
+          f"rejected={sched.rejected} "
+          f"rejected_frac={st['rejected_frac']:.3f} "
+          f"quarantined={st['quarantined']} failed={st['failed']}")
+    return [toks.get(i, np.zeros((0,), np.int32)) for i in range(len(lens))]
 
 
 def main():

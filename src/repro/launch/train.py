@@ -31,12 +31,19 @@ def _parse():
     ap.add_argument("--tau-max", type=int, default=4)
     ap.add_argument("--async-schedule", default="uniform",
                     choices=["constant", "uniform", "roundrobin",
-                             "straggler", "crash"])
+                             "straggler", "crash", "rejoin"])
     ap.add_argument("--compressor", default="none",
                     choices=["none", "topk", "onebit"])
     ap.add_argument("--ef", action=argparse.BooleanOptionalAction,
                     default=True,
                     help="error feedback for --compressor (async path)")
+    ap.add_argument("--crash-subst", action="store_true",
+                    help="async: renormalize dead-worker mass so survivors "
+                         "keep the full step size (paper crash_subst)")
+    # fault injection (repro.faults): a plan path or inline JSON; the
+    # supervisor forwards --fault-attempt so kill events fire exactly once
+    ap.add_argument("--fault-plan", default="")
+    ap.add_argument("--fault-attempt", type=int, default=0)
     ap.add_argument("--devices", type=int, default=0)
     ap.add_argument("--model-shards", type=int, default=1)
     ap.add_argument("--ckpt-dir", default="")
@@ -73,6 +80,12 @@ def main():
     from repro.optim import momentum
 
     cfg = get_config(args.arch)
+    injector = None
+    if args.fault_plan:
+        from repro.faults import FaultPlan, TrainFaultInjector
+        injector = TrainFaultInjector(FaultPlan.load(args.fault_plan),
+                                      attempt=args.fault_attempt)
+    guard = injector is not None and injector.has_poison
     mesh = make_host_mesh(model=args.model_shards)
     flags = TF.RunFlags(remat=False)
     defs = TF.model_defs(cfg)
@@ -84,9 +97,16 @@ def main():
     data = SyntheticLMDataset(cfg.vocab_size, args.seq, args.batch,
                               seed=args.seed)
 
+    # the poison guard only arms the paths that implement it; a poison plan
+    # with --sync elastic would corrupt params silently, so refuse it
+    if guard and args.sync not in ("exact", "async"):
+        raise SystemExit("--fault-plan with grad_poison events needs "
+                         "--sync exact or async (the skip-step guard)")
+
     if args.sync == "exact":
         sync_state = {"step": jnp.zeros((), jnp.int32)}
-        step = jax.jit(make_train_step(cfg, opt, flags), donate_argnums=(0, 1))
+        step = jax.jit(make_train_step(cfg, opt, flags, skip_nonfinite=guard),
+                       donate_argnums=(0, 1))
 
         def run(params, opt_state, sync_state, batch):
             params, opt_state, metrics = step(params, opt_state, batch)
@@ -94,18 +114,27 @@ def main():
     elif args.sync == "async":
         # horizon is decoupled from --steps (up to 1024) so resuming with a
         # larger --steps reuses the checkpointed tau table unchanged and
-        # never wraps it.  The crash schedule is the exception: its crash
-        # point is horizon//2, so its table must be run-length-aligned for
-        # workers to actually die mid-run — extending a crash run needs the
-        # original --steps (the resume shape guard enforces this).
-        horizon = max(args.steps, 1) if args.async_schedule == "crash" \
+        # never wraps it.  The crash/rejoin schedules are the exception:
+        # their outage points are horizon fractions, so their tables must be
+        # run-length-aligned for workers to actually die mid-run — extending
+        # such a run needs the original --steps (the resume shape guard
+        # enforces this).
+        horizon = max(args.steps, 1) \
+            if args.async_schedule in ("crash", "rejoin") \
             else max(args.steps, 1024)
         acfg = AsyncConfig(
             tau_max=args.tau_max, schedule=args.async_schedule,
             axis_names=("data",), compressor=args.compressor,
             error_feedback=args.ef, topk_ratio=args.topk_ratio,
-            horizon=horizon, seed=args.seed)
+            horizon=horizon, seed=args.seed,
+            crash_subst=args.crash_subst, skip_nonfinite=guard)
         sync_state = init_async_state(acfg, mesh, params)
+        if injector is not None and injector.plan.has_tau_events:
+            # scheduled crash/rejoin/delay/drop faults rewrite the pre-drawn
+            # tau table — the engine then runs them with no new code, and a
+            # resume restores the SAME rewritten table from the checkpoint
+            sync_state["taus"] = jnp.asarray(injector.plan.apply_to_taus(
+                np.asarray(sync_state["taus"]), args.tau_max))
         astep = make_async_train_step(cfg, opt, mesh, acfg, pspecs, flags)
         jstep = jax.jit(astep, donate_argnums=(0, 1, 2))
 
@@ -150,11 +179,20 @@ def main():
             print(f"resumed from step {last}")
 
     losses = []
+    skipped = 0
     for t in range(step_idx, args.steps):
         batch = data.batch(t)
+        if guard:
+            # the loss_scale channel: all-ones normally, NaN/Inf on
+            # grad_poison steps; (B,)-shaped so the batch stays uniformly
+            # shardable.  Present on EVERY step once armed — one program,
+            # and a benign scale of 1.0 is bitwise-neutral
+            batch = dict(batch, loss_scale=np.full(
+                (args.batch,), injector.loss_scale(t), np.float32))
         params, opt_state, sync_state, metrics = run(
             params, opt_state, sync_state, batch)
         losses.append(float(metrics["loss"]))
+        skipped += int(float(metrics.get("nonfinite", 0.0)) > 0)
         if t % args.log_every == 0:
             gap = float(metrics.get("gap2_over_alpha2",
                                     metrics.get("stale_gap2", 0.0)))
@@ -165,9 +203,26 @@ def main():
                   f"{tau}", flush=True)
         if args.ckpt_dir and args.ckpt_every and \
                 (t + 1) % args.ckpt_every == 0:
-            save_checkpoint(args.ckpt_dir, t + 1,
-                            (params, opt_state, sync_state))
-    print(f"final loss {np.mean(losses[-10:]):.4f}")
+            try:
+                if injector is not None:
+                    injector.check_ckpt_io(t + 1)
+                save_checkpoint(args.ckpt_dir, t + 1,
+                                (params, opt_state, sync_state))
+            except OSError as e:
+                # checkpointing is best-effort: warn and keep training —
+                # the next save (or the torn-ckpt skip in latest_step)
+                # covers recovery
+                print(f"ckpt save failed at step {t + 1}: {e}", flush=True)
+        if injector is not None:
+            injector.maybe_kill(t)
+    if injector is not None:
+        print(f"faults: poisoned={injector.poisoned_steps} "
+              f"skipped={skipped} ckpt_errors={injector.ckpt_errors}",
+              flush=True)
+        finite = [l for l in losses[-10:] if np.isfinite(l)]
+        print(f"final loss {np.mean(finite if finite else losses[-10:]):.4f}")
+    else:
+        print(f"final loss {np.mean(losses[-10:]):.4f}")
     return losses
 
 

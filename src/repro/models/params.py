@@ -18,6 +18,7 @@ order wins the ``model`` axis; optionally a second dim is sharded over the
 from __future__ import annotations
 
 import dataclasses
+import zlib
 from dataclasses import dataclass
 from typing import Any, Callable
 
@@ -131,10 +132,14 @@ def _path_str(path) -> str:
 
 def init_params(defs, key: jax.Array):
     """Materialize a ParamDef tree; per-leaf keys derive from the tree path so
-    the result is insertion-order independent."""
+    the result is insertion-order independent.  The path digest must be
+    stable ACROSS processes (crc32, not the salted builtin ``hash``), or a
+    supervisor restart / replay oracle would initialize a different model
+    from the same seed."""
 
     def leaf(path, d: ParamDef):
-        k = jax.random.fold_in(key, hash(_path_str(path)) % (2**31))
+        digest = zlib.crc32(_path_str(path).encode()) % (2**31)
+        k = jax.random.fold_in(key, digest)
         return d.materialize(k)
 
     return jax.tree_util.tree_map_with_path(leaf, defs, is_leaf=is_param_def)

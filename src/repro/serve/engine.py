@@ -109,13 +109,18 @@ def make_paged_decode_step(cfg: ArchConfig, pcfg: PagedCacheConfig,
                            flags: TF.RunFlags = TF.DEFAULT_FLAGS, *,
                            window: int = 0,
                            sample: SampleConfig = SampleConfig(),
-                           use_kernel: bool = False):
+                           use_kernel: bool = False,
+                           check_finite: bool = False):
     """``(params, k_pool, v_pool, tokens (R,), pos (R,), table, active,
     key) -> (tokens (R,), pos (R,), k_pool, v_pool)`` — one decode step for
     all R request slots (donate the pools).  Mirrors
     `repro.models.transformer.decode_step` layer for layer, with the dense
     cache update swapped for a page scatter/gather.  ``pos`` is advanced
-    in-jit for active slots so the hot loop never re-uploads it."""
+    in-jit for active slots so the hot loop never re-uploads it.
+
+    ``check_finite`` appends a per-slot ``finite`` (R,) bool output (all
+    last-position logits finite) — the quarantine signal.  Off by default
+    so the hot path's program stays byte-identical."""
     ps = pcfg.page_size
     r, n_table = pcfg.max_requests, pcfg.max_pages_per_seq
 
@@ -156,8 +161,13 @@ def make_paged_decode_step(cfg: ArchConfig, pcfg: PagedCacheConfig,
             body, (x, 0.0), (params["layers"], k_pool, v_pool))
         logits = TF.lm_logits(cfg, params, x)                 # (R, 1, V)
         pos_next = jnp.where(active, pos + 1, pos)
-        return (sample_tokens(logits[:, -1, :], sample, key), pos_next,
-                k_pool, v_pool)
+        out = (sample_tokens(logits[:, -1, :], sample, key), pos_next,
+               k_pool, v_pool)
+        if check_finite:
+            finite = jnp.all(jnp.isfinite(
+                logits[:, -1, :].astype(jnp.float32)), axis=-1)
+            return out + (finite,)
+        return out
 
     return step
 
@@ -213,11 +223,13 @@ class StepEngine:
                  sample: SampleConfig = SampleConfig(),
                  use_kernel: bool = False,
                  replica: ParamReplica | None = None,
-                 mesh=None, seed: int = 0):
+                 mesh=None, seed: int = 0,
+                 check_finite: bool = False):
         self.cfg, self.pcfg, self.flags = cfg, pcfg, flags
         self.window = validate_paged_support(cfg)
         self.sample = sample
         self.replica = replica
+        self.check_finite = check_finite
         self._static_params = params
         self.alloc = PageAllocator(pcfg)
         r, n_table = pcfg.max_requests, pcfg.max_pages_per_seq
@@ -248,9 +260,11 @@ class StepEngine:
         self._key = jax.random.PRNGKey(seed)
         self._decode = jax.jit(
             make_paged_decode_step(cfg, pcfg, flags, window=self.window,
-                                   sample=sample, use_kernel=use_kernel),
+                                   sample=sample, use_kernel=use_kernel,
+                                   check_finite=check_finite),
             donate_argnums=(1, 2))
         self._prefills: dict = {}
+        self._finite = None           # (R,) device bools (check_finite only)
         self.steps = 0
 
     # -- capacity ----------------------------------------------------------
@@ -325,13 +339,40 @@ class StepEngine:
             self._d_active = jnp.asarray(self.active)
             self._dirty = False
         key = self._key if self.sample.is_greedy else self._next_key()
-        toks, self._d_pos, self.k_pool, self.v_pool = self._decode(
+        out = self._decode(
             self._params(), self.k_pool, self.v_pool, self.tokens,
             self._d_pos, self._d_table, self._d_active, key)
+        if self.check_finite:
+            toks, self._d_pos, self.k_pool, self.v_pool, self._finite = out
+        else:
+            toks, self._d_pos, self.k_pool, self.v_pool = out
         self.tokens = toks
         self.pos[self.active] += 1
         self.steps += 1
         return toks
+
+    def nonfinite_rids(self) -> list:
+        """Requests whose last decode hit non-finite logits (empty unless
+        ``check_finite``) — the scheduler's quarantine signal.  This is the
+        one host sync the fault path pays, and only when armed."""
+        if not self.check_finite or self._finite is None:
+            return []
+        flags = np.asarray(self._finite)
+        return [self.slot_rid[s] for s in np.flatnonzero(self.active)
+                if not flags[s] and self.slot_rid[s] is not None]
+
+    def poison_kv(self, rid) -> None:
+        """Fault injection: NaN the request's most recently written KV
+        position.  Every live query attends that position, so the next
+        decode step's logits go NaN for this slot — exactly the corruption
+        the quarantine path must contain (`repro.faults`)."""
+        slot = self._slot_of[rid]
+        pos = int(self.pos[slot])
+        if pos < 1:
+            return
+        page = int(self.table[slot, (pos - 1) // self.pcfg.page_size])
+        off = (pos - 1) % self.pcfg.page_size
+        self.k_pool = self.k_pool.at[:, page, off].set(jnp.nan)
 
     def finish(self, rid) -> None:
         """Evict ``rid``: free its pages and slot."""

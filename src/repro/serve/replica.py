@@ -19,10 +19,17 @@ mean "refresh missed entirely" and pin the replica at maximal allowed lag).
 """
 from __future__ import annotations
 
+import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.delivery import (DROPPED, make_tau_schedule, tree_ring_init,
                                  tree_ring_put, tree_ring_read)
+
+
+def _all_finite(tree) -> bool:
+    return all(bool(jnp.all(jnp.isfinite(leaf)))
+               for leaf in jax.tree.leaves(tree))
 
 
 class ParamReplica:
@@ -39,21 +46,35 @@ class ParamReplica:
             tree_ring_init(self.capacity, params), 0, params)
         self.latest_version = 0
         self.serving_version = 0
+        if not _all_finite(params):
+            raise ValueError("replica bootstrap params contain non-finite "
+                             "leaves — nothing safe to serve")
         lags = make_tau_schedule(schedule, 1, horizon, tau_serve, seed)[:, 0]
         # DROPPED refresh = the replica missed the round: maximal legal lag
         self._lags = np.where(lags == DROPPED, tau_serve, lags)
         self._refreshes = 0
+        self.refused = 0
 
     @property
     def staleness(self) -> int:
         return self.latest_version - self.serving_version
 
-    def publish(self, params, version: int | None = None) -> int:
+    def publish(self, params, version: int | None = None) -> int | None:
         """Trainer side: install a new version (defaults to latest + 1).
 
         Overwrites the ring slot ``version % capacity`` — the version that
         falls out of the window is exactly the one no replica may serve
-        anymore (it would exceed ``tau_serve``)."""
+        anymore (it would exceed ``tau_serve``).
+
+        A version containing non-finite leaves is **refused** (returns
+        None, bumps :attr:`refused`): the ring, ``latest_version`` and the
+        staleness floor are untouched, so the replica keeps serving the
+        last healthy snapshot while training recovers — poisoned params
+        must never enter the window, or the floor itself would force
+        serving them."""
+        if not _all_finite(params):
+            self.refused += 1
+            return None
         v = self.latest_version + 1 if version is None else version
         if v != self.latest_version + 1:
             raise ValueError(

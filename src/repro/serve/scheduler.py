@@ -20,9 +20,24 @@ deterministically and latency percentiles are machine-independent.
 Tokens never round-trip to host during the run: the pump keeps the engine's
 per-step (R,) device arrays plus (step, slot) coordinates per request, and
 ``drain`` materializes everything with ONE device->host fetch at the end.
+
+Graceful degradation (`repro.faults`):
+
+  * **retry-after backpressure** — a full queue still rejects ``submit``
+    (the bound is the bound), but the scheduler now advertises
+    ``retry_after`` (ticks until capacity is plausible) and ``run()``
+    re-enqueues rejected arrivals at ``clock + retry_after`` instead of
+    silently dropping them: every request in a trace eventually completes,
+    and the pressure is visible as ``rejected_frac`` in :meth:`stats`.
+  * **NaN quarantine** — with ``quarantine=True`` and an engine exposing
+    ``nonfinite_rids()``, a request whose decode hit non-finite logits is
+    evicted and requeued ONCE (from scratch — its poisoned KV pages are
+    freed); a second offense marks its completion ``failed`` rather than
+    letting it corrupt the batch forever.
 """
 from __future__ import annotations
 
+import heapq
 from collections import deque
 from dataclasses import dataclass
 
@@ -44,30 +59,45 @@ class Completion:
     admitted: int                 # step admitted (prefill step)
     finished: int                 # step the last token was emitted
     tokens: np.ndarray | None = None
+    failed: bool = False          # quarantined twice; tokens stay None
 
 
 class ContinuousScheduler:
     """Bounded-admission continuous-batching pump over a `StepEngine`."""
 
-    def __init__(self, engine, *, queue_limit: int = 64):
+    def __init__(self, engine, *, queue_limit: int = 64,
+                 quarantine: bool = False, on_tick=None):
         self.engine = engine
         self.queue_limit = queue_limit
+        self.quarantine = quarantine
+        self.on_tick = on_tick        # fault-injection hook (repro.faults)
         self.queue: deque = deque()
         self.clock = 0
+        self.submitted = 0
         self.rejected = 0
+        self.resubmitted = 0
+        self.quarantined = 0
+        self.failed = 0
+        self.retry_after = 1          # backpressure hint for rejected submits
         self._emitted: dict = {}      # rid -> tokens emitted so far
         self._live: dict = {}         # rid -> Request (admitted, not done)
         self._first_tok: dict = {}    # rid -> (1,) device array
         self._coords: dict = {}       # rid -> list of (step_idx, slot)
         self._step_log: list = []     # per engine step: (R,) device tokens
+        self._qcount: dict = {}       # rid -> times quarantined
         self.completions: dict = {}   # rid -> Completion
         self.latencies: list = []     # (finished - arrival) per request
 
     # -- admission ---------------------------------------------------------
     def submit(self, req: Request) -> bool:
-        """Queue a request; False (rejected) when the queue is full."""
+        """Queue a request; False (rejected) when the queue is full.  A
+        rejection updates :attr:`retry_after` — come back in that many
+        ticks (the queue drains at roughly one admission per tick, so the
+        hint is the current backlog, bounded to stay responsive)."""
+        self.submitted += 1
         if len(self.queue) >= self.queue_limit:
             self.rejected += 1
+            self.retry_after = max(1, min(len(self.queue), 8))
             return False
         self.queue.append(req)
         return True
@@ -94,12 +124,37 @@ class ContinuousScheduler:
         self.completions[rid].finished = self.clock
         self.latencies.append(self.clock - req.arrival)
 
+    def _quarantine(self, rid) -> None:
+        """Evict a poisoned request; requeue once (at the queue head — it
+        was wronged, not late), fail it on the second offense."""
+        self.engine.finish(rid)       # frees the poisoned KV pages
+        req = self._live.pop(rid)
+        del self._emitted[rid], self._first_tok[rid], self._coords[rid]
+        if self._qcount.get(rid, 0) >= 1:
+            comp = self.completions[rid]
+            comp.finished = self.clock
+            comp.failed = True
+            self.failed += 1
+            return
+        del self.completions[rid]     # readmission rebuilds it
+        self._qcount[rid] = 1
+        self.quarantined += 1
+        self.queue.appendleft(req)
+
     # -- the pump ----------------------------------------------------------
     def step(self) -> None:
         """One tick: admit, then one decode step for the active set."""
+        if self.on_tick is not None:
+            self.on_tick(self)
         self._admit()
         if self._live:
             toks = self.engine.step()
+            bad = ()
+            if self.quarantine and hasattr(self.engine, "nonfinite_rids"):
+                bad = tuple(self.engine.nonfinite_rids())
+            for rid in bad:
+                if rid in self._live:
+                    self._quarantine(rid)
             idx = len(self._step_log)
             self._step_log.append(toks)
             for rid, req in list(self._live.items()):
@@ -110,11 +165,24 @@ class ContinuousScheduler:
         self.clock += 1
 
     def run(self, trace: list[Request], *, max_steps: int = 100_000) -> dict:
-        """Replay an arrival trace to completion; returns rid -> tokens."""
-        pending = deque(sorted(trace, key=lambda r: (r.arrival, r.rid)))
+        """Replay an arrival trace to completion; returns rid -> tokens.
+
+        Rejected arrivals are NOT dropped: they come back ``retry_after``
+        ticks later (original arrival kept, so their measured latency
+        includes the backpressure wait)."""
+        pending = [(r.arrival, i, r)
+                   for i, r in enumerate(
+                       sorted(trace, key=lambda r: (r.arrival, r.rid)))]
+        heapq.heapify(pending)
+        seq = len(pending)
         while pending or self.queue or self._live:
-            while pending and pending[0].arrival <= self.clock:
-                self.submit(pending.popleft())
+            while pending and pending[0][0] <= self.clock:
+                _, _, req = heapq.heappop(pending)
+                if not self.submit(req):
+                    self.resubmitted += 1
+                    heapq.heappush(
+                        pending, (self.clock + self.retry_after, seq, req))
+                    seq += 1
             self.step()
             if self.clock > max_steps:
                 raise RuntimeError(
@@ -123,13 +191,17 @@ class ContinuousScheduler:
 
     def drain(self) -> dict:
         """Materialize every request's tokens: ONE host fetch for the whole
-        run (the per-step arrays were device-resident throughout)."""
+        run (the per-step arrays were device-resident throughout).  Failed
+        (twice-quarantined) requests keep ``tokens=None`` and are excluded
+        from the result; their count is in :meth:`stats`."""
         if self._step_log:
             all_tok = np.asarray(jnp.stack(self._step_log))   # (steps, R)
         else:
             all_tok = np.zeros((0, 0), np.int32)
         out = {}
         for rid, comp in self.completions.items():
+            if comp.failed:
+                continue
             first = np.asarray(self._first_tok[rid])          # (1,)
             rest = np.array([all_tok[i, s] for i, s in self._coords[rid]],
                             np.int32)
@@ -143,3 +215,19 @@ class ContinuousScheduler:
             return 0.0, 0.0
         arr = np.asarray(self.latencies, np.float64)
         return float(np.percentile(arr, 50)), float(np.percentile(arr, 99))
+
+    def stats(self) -> dict:
+        """Backpressure/fault accounting.  ``rejected_frac`` is rejections
+        over submit attempts (retries count as attempts) — the bench rows
+        gate on it so silent-rejection regressions show up."""
+        p50, p99 = self.latency_percentiles()
+        return {
+            "submitted": self.submitted,
+            "rejected": self.rejected,
+            "resubmitted": self.resubmitted,
+            "quarantined": self.quarantined,
+            "failed": self.failed,
+            "rejected_frac": self.rejected / max(self.submitted, 1),
+            "p50": p50,
+            "p99": p99,
+        }

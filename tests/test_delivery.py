@@ -137,7 +137,7 @@ def test_tau_schedules_bounded():
         assert taus.shape == (20, 4) and taus.dtype == np.int32
         live = taus[taus != DLV.DROPPED]
         assert live.min() >= 0 and live.max() <= 3
-        if sched != "crash":
+        if sched not in ("crash", "rejoin"):   # only outages go DROPPED
             assert (taus >= 0).all()
     # determinism: one seed, one table
     a = DLV.make_tau_schedule("uniform", 4, 20, 3, seed=7)
@@ -171,6 +171,86 @@ def test_elastic_variance_tensor_mass_neutral():
 def test_crash_conservation_deterministic():
     check_crash_conservation("crash_subst", 6, 2, 12, seed=0)
     check_crash_conservation("crash", 6, 2, 12, seed=0)
+
+
+# ---------------------------------------------------------------------------
+# crash -> rejoin (recovery, not just failure)
+# ---------------------------------------------------------------------------
+
+def test_rejoin_schedule_outage_window():
+    """Crashed workers actually come back: DROPPED only inside the
+    window, normal bounded delays before AND after."""
+    taus = DLV.make_tau_schedule("rejoin", 4, 30, 3, seed=2)
+    down, back = 30 // 3, (2 * 30) // 3
+    w = 3                                      # last worker crashes (p//4=1)
+    assert (taus[down:back, w] == DLV.DROPPED).all()
+    assert (taus[:down, w] >= 0).all()
+    assert (taus[back:, w] >= 0).all()         # the worker rejoined
+    assert (taus[:, :w] >= 0).all()            # survivors never drop
+
+
+def test_ring_exactly_once_rejoin_schedule():
+    """Exactly-once delivery holds across the crash->rejoin boundary: the
+    outage loses exactly its own messages, re-entry duplicates nothing."""
+    delays = DLV.make_tau_schedule("rejoin", 4, 18, 2, seed=3)
+    assert (delays == DLV.DROPPED).any()
+    assert (delays[-1] >= 0).all()             # everyone is back at the end
+    check_ring_invariants(delays, 2)
+
+
+def check_rejoin_conservation(kind: str, p: int, t_steps: int, seed: int):
+    """`delivery_tensors` with a rejoin_step: the crash-model conservation
+    laws extend over re-entry (alive rows after rejoin count full mass)."""
+    rng = np.random.default_rng(seed)
+    crash = rng.integers(0, t_steps, size=p)
+    rejoin = np.minimum(crash + 1 + rng.integers(0, t_steps, size=p),
+                        2 * t_steps)           # some never rejoin in-run
+    per_run = {"crash_step": jnp.asarray(crash),
+               "rejoin_step": jnp.asarray(rejoin),
+               "hear_u": jnp.asarray(rng.uniform(size=(p, p)))}
+    u, new_alive = DLV.delivery_tensors(kind, p, t_steps, {}, per_run, {})
+    u, alive = np.asarray(u), np.asarray(new_alive)
+    # rejoined workers are alive again
+    ts = np.arange(t_steps)[:, None]
+    np.testing.assert_array_equal(
+        alive, ((crash[None] >= ts) & (crash[None] != ts))
+        | (ts >= rejoin[None]))
+    in_recv = u[:, 0, :]
+    assert np.all((in_recv == 0) | (in_recv == 1))
+    rows = u[:, 1:, :]
+    assert np.all(rows[~alive] == 0)           # dead rows stay zero
+    row_sums = rows.sum(axis=2)
+    if kind == "crash_subst":
+        expect = in_recv.sum(axis=1, keepdims=True)
+        assert np.allclose(row_sums[alive],
+                           np.broadcast_to(expect, row_sums.shape)[alive])
+    else:
+        assert np.all(row_sums <= in_recv.sum(axis=1)[:, None] + 1e-6)
+
+
+def test_rejoin_mass_conservation_deterministic():
+    check_rejoin_conservation("crash_subst", 6, 14, seed=0)
+    check_rejoin_conservation("crash", 6, 14, seed=0)
+
+
+def test_fault_plan_taus_keep_ring_invariants():
+    """FaultPlan tau rewrites (crash/rejoin/delay/drop) only ever write
+    legal values, so exactly-once delivery survives any plan."""
+    from repro.faults import FaultEvent, FaultPlan
+
+    base = DLV.make_tau_schedule("uniform", 4, 16, 3, seed=5)
+    plan = FaultPlan(events=(
+        FaultEvent(step=3, kind="crash", worker=1, duration=0),
+        FaultEvent(step=9, kind="rejoin", worker=1),
+        FaultEvent(step=2, kind="delay", worker=0, duration=4),
+        FaultEvent(step=6, kind="drop", worker=2, duration=2),
+    ))
+    taus = plan.apply_to_taus(base, 3)
+    assert (taus[3:9, 1] == DLV.DROPPED).all()
+    np.testing.assert_array_equal(taus[9:, 1], base[9:, 1])  # delays resume
+    assert (taus[2:6, 0] == 3).all()
+    assert (taus[6:8, 2] == DLV.DROPPED).all()
+    check_ring_invariants(taus, 3)
 
 
 # ---------------------------------------------------------------------------

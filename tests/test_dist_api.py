@@ -51,7 +51,7 @@ def test_sharding_symbols_and_signatures():
 def test_train_symbols_and_signatures():
     assert params_of(DT.loss_fn) == ["cfg", "params", "batch", "flags"]
     assert params_of(DT.make_train_step) == ["cfg", "opt", "flags",
-                                             "grad_accum"]
+                                             "grad_accum", "skip_nonfinite"]
     ep = params_of(DT.make_elastic_train_step)
     assert ep[:6] == ["cfg", "opt", "mesh", "scfg", "pspecs", "flags"]
     assert "static_phase" in ep and "grad_accum" in ep
@@ -73,6 +73,8 @@ def test_async_engine_symbols_and_signatures():
     assert acfg.tau_max == 0 and acfg.schedule == "uniform"
     assert acfg.compressor == "none" and acfg.error_feedback is True
     assert acfg.capacity == 1 and acfg.has_err is False
+    # fault-tolerance knobs default OFF (the fast path traces no guards)
+    assert acfg.crash_subst is False and acfg.skip_nonfinite is False
     from repro.core.delivery import DROPPED, TAU_SCHEDULES
     assert acfg.schedule in TAU_SCHEDULES and DROPPED == -1
     # per-worker key registry shared between layout and spec builders

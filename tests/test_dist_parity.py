@@ -99,6 +99,45 @@ def test_async_tau0_matches_gspmd_baseline(setup):
     _assert_matches(setup, params, losses)
 
 
+def test_async_tau0_empty_fault_plan_matches_baseline(setup):
+    """An EMPTY fault plan is a true no-op: applying it to the tau table is
+    bitwise-identity, and the tau0 run still matches synchronous SGD — the
+    fault machinery adds nothing when nothing is scheduled."""
+    from repro.faults import FaultPlan
+
+    cfg, mesh, flags, pspecs, params, opt, batches = setup
+    acfg = AsyncConfig(tau_max=0, schedule="constant")
+    state = init_async_state(acfg, mesh, params)
+    before = np.asarray(state["taus"])
+    rewritten = FaultPlan().apply_to_taus(before, acfg.tau_max)
+    np.testing.assert_array_equal(rewritten, before)
+    state["taus"] = jnp.asarray(rewritten)
+    step = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
+                                         flags))
+    opt_state, losses = opt.init(params), []
+    for b in batches:
+        params, opt_state, state, m = step(params, opt_state, state, b)
+        losses.append(float(m["loss"]))
+    _assert_matches(setup, params, losses)
+
+
+def test_async_tau0_crash_subst_matches_baseline(setup):
+    """With one worker and tau 0 every step delivers exactly its own
+    gradient, so the crash_subst renormalization is a multiply by n/cnt =
+    1.0 — the guarded program must reproduce the baseline."""
+    cfg, mesh, flags, pspecs, params, opt, batches = setup
+    acfg = AsyncConfig(tau_max=0, schedule="constant", crash_subst=True)
+    state = init_async_state(acfg, mesh, params)
+    step = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
+                                         flags))
+    opt_state, losses = opt.init(params), []
+    for b in batches:
+        params, opt_state, state, m = step(params, opt_state, state, b)
+        losses.append(float(m["loss"]))
+        assert float(m["nonfinite"]) == 0.0
+    _assert_matches(setup, params, losses)
+
+
 def test_async_stale_diverges_but_bounded(setup):
     """tau_max > 0: the realized staleness honors the bound, the staleness
     gap is visible, and training still moves parameters."""

@@ -1,0 +1,482 @@
+"""repro.faults invariants: the plan DSL replays deterministically, the
+injectors fire exactly the scheduled faults, and every degradation path
+degrades *gracefully*:
+
+  * torn checkpoints are skipped on resume instead of crashing it,
+  * a poisoned gradient step is skipped (params bitwise-unchanged), and on
+    the async path poison is zeroed before it can reach the delay rings,
+  * the serving replica refuses non-finite publishes and keeps serving the
+    last healthy snapshot,
+  * the scheduler quarantines NaN-logit requests (evict + requeue once,
+    fail on the second offense) and never leaks a page doing it,
+  * page-pool exhaustion turns into retry-after backpressure, not loss.
+"""
+import sys
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import latest_step, load_checkpoint, save_checkpoint
+from repro.core.delivery import DROPPED
+from repro.faults import (FAULT_KINDS, FaultEvent, FaultPlan,
+                          ServeFaultInjector, TrainFaultInjector)
+from repro.serve import (ContinuousScheduler, PagedCacheConfig,
+                         PageAllocator, ParamReplica, Request)
+
+
+# ---------------------------------------------------------------------------
+# the plan DSL
+# ---------------------------------------------------------------------------
+
+def test_fault_event_validation():
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="meteor")
+    with pytest.raises(ValueError):
+        FaultEvent(step=-1, kind="kill")
+    with pytest.raises(ValueError):
+        FaultEvent(step=0, kind="crash", duration=-2)
+    assert FaultEvent(step=0, kind="crash", duration=0).duration == 0
+
+
+def test_plan_queries():
+    plan = FaultPlan(events=(
+        FaultEvent(step=3, kind="grad_poison"),
+        FaultEvent(step=3, kind="ckpt_io"),
+        FaultEvent(step=7, kind="crash", worker=1, duration=0),
+    ))
+    assert {e.kind for e in plan.at(3)} == {"grad_poison", "ckpt_io"}
+    assert plan.at(3, "ckpt_io")[0].kind == "ckpt_io"
+    assert plan.at(5) == []
+    assert plan.kinds() == {"grad_poison", "ckpt_io", "crash"}
+    assert plan.has_poison and plan.has_tau_events
+    assert plan.max_step == 7
+    empty = FaultPlan()
+    assert not empty.has_poison and not empty.has_tau_events
+    assert empty.max_step == 0
+
+
+def test_plan_json_roundtrip(tmp_path):
+    plan = FaultPlan(events=(
+        FaultEvent(step=6, kind="kill", on_attempt=1),
+        FaultEvent(step=2, kind="grad_poison", param=1.0),
+        FaultEvent(step=4, kind="delay", worker=2, duration=3),
+    ), seed=9)
+    assert FaultPlan.from_json(plan.to_json()) == plan
+    # load() takes inline JSON or a path interchangeably
+    assert FaultPlan.load(plan.to_json()) == plan
+    p = tmp_path / "plan.json"
+    plan.save(str(p))
+    assert FaultPlan.load(str(p)) == plan
+    # dict events coerce (hand-written JSON-ish plans)
+    assert FaultPlan(events=({"step": 1, "kind": "kill"},)).events[0] == \
+        FaultEvent(step=1, kind="kill")
+
+
+def test_plan_random_is_pure_in_seed():
+    a = FaultPlan.random(5, steps=40, workers=4)
+    b = FaultPlan.random(5, steps=40, workers=4)
+    assert a == b
+    assert a != FaultPlan.random(6, steps=40, workers=4)
+    assert all(e.kind in FAULT_KINDS and 0 <= e.step < 40 for e in a.events)
+    steps = [e.step for e in a.events]
+    assert steps == sorted(steps)
+
+
+def test_plan_cli_authoring(tmp_path, monkeypatch):
+    from repro.faults import plan as plan_mod
+
+    out = tmp_path / "p.json"
+    monkeypatch.setattr(sys, "argv", [
+        "plan", "--out", str(out), "--kill-at", "6", "--kill-attempt", "0",
+        "--poison-at", "3", "--ckpt-io-at", "8",
+        "--crash", "1@4:0", "--rejoin", "1@9", "--delay", "0@2:3"])
+    plan_mod._main()
+    plan = FaultPlan.load(str(out))
+    assert plan.kinds() == {"kill", "grad_poison", "ckpt_io", "crash",
+                            "rejoin", "delay"}
+    crash = plan.at(4, "crash")[0]
+    assert crash.worker == 1 and crash.duration == 0
+    assert plan.at(9, "rejoin")[0].worker == 1
+
+
+# ---------------------------------------------------------------------------
+# the training-side injector (host half; the jit half is tested below)
+# ---------------------------------------------------------------------------
+
+def test_train_injector_loss_scale():
+    plan = FaultPlan(events=(
+        FaultEvent(step=2, kind="grad_poison"),
+        FaultEvent(step=4, kind="grad_poison", param=1.0),
+    ))
+    inj = TrainFaultInjector(plan)
+    assert inj.has_poison
+    assert inj.loss_scale(0) == 1.0 and inj.loss_scale(3) == 1.0
+    assert np.isnan(inj.loss_scale(2))
+    assert np.isposinf(inj.loss_scale(4))
+    assert inj.poisoned_steps == 2
+
+
+def test_train_injector_ckpt_io_and_kill_gating():
+    plan = FaultPlan(events=(
+        FaultEvent(step=8, kind="ckpt_io"),
+        FaultEvent(step=5, kind="kill", on_attempt=1),
+    ))
+    inj = TrainFaultInjector(plan, attempt=0)
+    inj.check_ckpt_io(4)                     # nothing scheduled: no-op
+    with pytest.raises(OSError):
+        inj.check_ckpt_io(8)
+    assert inj.ckpt_errors == 1
+    # the kill is scheduled for attempt 1; on attempt 0 it must NOT fire
+    # (if it did, this process would be gone)
+    inj.maybe_kill(5)
+
+
+# ---------------------------------------------------------------------------
+# checkpoint torn-write recovery (satellite: sidecar-first atomicity)
+# ---------------------------------------------------------------------------
+
+def test_latest_step_skips_torn_checkpoint(tmp_path):
+    tree = {"w": np.arange(3, dtype=np.float32)}
+    save_checkpoint(str(tmp_path), 4, tree)
+    save_checkpoint(str(tmp_path), 8, tree)
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")       # clean dir: no warnings
+        assert latest_step(str(tmp_path)) == 8
+    # lose step 8's sidecar (pre-ordering checkpoint / filesystem loss)
+    (tmp_path / "step_00000008.npz.treedef").unlink()
+    with pytest.warns(UserWarning, match="torn write"):
+        assert latest_step(str(tmp_path)) == 4
+    with pytest.raises(FileNotFoundError, match="latest_step"):
+        load_checkpoint(str(tmp_path), 8)
+    restored = load_checkpoint(str(tmp_path), 4)
+    np.testing.assert_array_equal(restored["w"], tree["w"])
+    # a corrupt (unpicklable) sidecar is just as torn as a missing one
+    (tmp_path / "step_00000004.npz.treedef").write_bytes(b"\x00garbage")
+    with pytest.warns(UserWarning, match="torn write"):
+        assert latest_step(str(tmp_path)) is None
+    assert latest_step(str(tmp_path / "nope")) is None
+
+
+def test_orphan_sidecar_is_invisible(tmp_path):
+    """The crash window of the sidecar-first ordering: a kill between the
+    two replaces leaves a sidecar with no ``.npz`` — resume never sees it."""
+    tree = {"w": np.zeros(2, np.float32)}
+    save_checkpoint(str(tmp_path), 3, tree)
+    (tmp_path / "step_00000003.npz").unlink()   # the .npz never landed
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        assert latest_step(str(tmp_path)) is None
+
+
+# ---------------------------------------------------------------------------
+# the skip-step guard on the real train step
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def tiny():
+    from repro.configs import get_config
+    from repro.data.pipeline import SyntheticLMDataset
+    from repro.models import transformer as TF
+    from repro.models.params import init_params
+    from repro.optim import momentum
+
+    cfg = get_config("qwen3-1.7b").reduced()
+    flags = TF.RunFlags(remat=False)
+    params = init_params(TF.model_defs(cfg), jax.random.PRNGKey(0))
+    opt = momentum(1e-2, 0.9)
+    data = SyntheticLMDataset(cfg.vocab_size, 32, 4, seed=0)
+    return cfg, flags, params, opt, data
+
+
+def _scaled(batch, scale):
+    return dict(batch, loss_scale=np.full((4,), scale, np.float32))
+
+
+def test_guarded_step_neutral_scale_matches_unguarded(tiny):
+    from repro.dist.train import make_train_step
+
+    cfg, flags, params, opt, data = tiny
+    plain = jax.jit(make_train_step(cfg, opt, flags))
+    guarded = jax.jit(make_train_step(cfg, opt, flags, skip_nonfinite=True))
+    p_a, s_a, m_a = plain(params, opt.init(params), data.batch(0))
+    p_b, s_b, m_b = guarded(params, opt.init(params),
+                            _scaled(data.batch(0), 1.0))
+    assert float(m_b["nonfinite"]) == 0.0
+    np.testing.assert_allclose(float(m_a["loss"]), float(m_b["loss"]),
+                               atol=1e-6)
+    for a, b in zip(jax.tree.leaves(p_a), jax.tree.leaves(p_b)):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-6)
+
+
+def test_guarded_step_skips_poisoned_batch(tiny):
+    from repro.dist.train import make_train_step
+
+    cfg, flags, params, opt, data = tiny
+    step = jax.jit(make_train_step(cfg, opt, flags, skip_nonfinite=True))
+    opt_state = opt.init(params)
+    # poisoned step: loss is NaN, but params/opt state are bitwise frozen
+    p1, s1, m = step(params, opt_state, _scaled(data.batch(0), np.nan))
+    assert not np.isfinite(float(m["loss"]))
+    assert float(m["nonfinite"]) == 1.0
+    for a, b in zip(jax.tree.leaves(params), jax.tree.leaves(p1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    for a, b in zip(jax.tree.leaves(opt_state), jax.tree.leaves(s1)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    # the next clean step trains normally from the preserved state
+    p2, s2, m2 = step(p1, s1, _scaled(data.batch(1), 1.0))
+    assert float(m2["nonfinite"]) == 0.0 and np.isfinite(float(m2["loss"]))
+    delta = sum(float(jnp.sum(jnp.abs(a - b))) for a, b in
+                zip(jax.tree.leaves(p1), jax.tree.leaves(p2)))
+    assert delta > 0
+
+
+def test_async_engine_contains_poison(tiny):
+    """skip_nonfinite on the async path: a poisoned local gradient is
+    zeroed BEFORE it reaches the delay rings (and before compression/EF),
+    so later steps never replay it — params stay finite forever."""
+    from repro.dist import sharding as SH
+    from repro.dist.async_engine import (AsyncConfig, init_async_state,
+                                         make_async_train_step)
+    from repro.jax_compat import make_mesh
+    from repro.models import transformer as TF
+    from repro.models.params import param_specs
+
+    cfg, flags, params, opt, data = tiny
+    mesh = make_mesh((1, 1), ("data", "model"))
+    pspecs = param_specs(TF.model_defs(cfg), SH.axis_sizes(mesh))
+    acfg = AsyncConfig(tau_max=2, schedule="uniform", seed=1,
+                       skip_nonfinite=True)
+    state = init_async_state(acfg, mesh, params)
+    step = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
+                                         flags))
+    opt_state = opt.init(params)
+    for t in range(6):
+        scale = np.nan if t == 2 else 1.0
+        params, opt_state, state, m = step(params, opt_state, state,
+                                           _scaled(data.batch(t), scale))
+        assert float(m["nonfinite"]) == (1.0 if t == 2 else 0.0)
+        if t != 2:
+            assert np.isfinite(float(m["loss"]))
+        assert all(bool(jnp.all(jnp.isfinite(leaf)))
+                   for leaf in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# replica publish refusal
+# ---------------------------------------------------------------------------
+
+def _vparams(v: float):
+    return {"w": jnp.full((3,), float(v), jnp.float32)}
+
+
+def test_replica_refuses_nonfinite_publish():
+    rep = ParamReplica(_vparams(0), 2)
+    bad = {"w": jnp.asarray([1.0, np.nan, 2.0], jnp.float32)}
+    assert rep.publish(bad) is None
+    assert rep.refused == 1 and rep.latest_version == 0
+    # still serving the healthy bootstrap snapshot
+    assert float(rep.serving_params()["w"][0]) == 0.0
+    # recovery: the next finite publish advances normally
+    assert rep.publish(_vparams(1)) == 1
+    assert rep.latest_version == 1 and rep.refused == 1
+    with pytest.raises(ValueError, match="non-finite"):
+        ParamReplica({"w": jnp.asarray([np.inf], jnp.float32)}, 1)
+
+
+# ---------------------------------------------------------------------------
+# scheduler quarantine + backpressure over a fake engine (real allocator)
+# ---------------------------------------------------------------------------
+
+class PoisonableEngine:
+    """test_serve's FakeEngine surface plus the quarantine verbs
+    (``nonfinite_rids`` / ``poison_kv``).  Poison lives with the request's
+    pages: ``finish`` frees both, so a requeued request restarts clean —
+    exactly the real engine's semantics."""
+
+    def __init__(self, pcfg: PagedCacheConfig, sticky: bool = False):
+        self.pcfg = pcfg
+        self.alloc = PageAllocator(pcfg)
+        self.active = np.zeros(pcfg.max_requests, bool)
+        self._slot_of: dict = {}
+        self.steps = 0
+        self.poisoned: set = set()
+        self.sticky = sticky          # re-poison on readmission (2nd offense)
+        self._ever_poisoned: set = set()
+
+    def has_slot(self) -> bool:
+        return int(self.active.sum()) < self.pcfg.max_requests
+
+    def can_admit(self, prompt_len: int, max_new: int) -> bool:
+        total = prompt_len + max_new
+        return self.has_slot() and self.alloc.can_alloc(
+            self.pcfg.pages_needed(total))
+
+    def start(self, rid, prompt, max_new):
+        pages = self.alloc.alloc(rid, self.pcfg.pages_needed(
+            len(prompt) + max_new))
+        assert pages is not None
+        slot = int(np.flatnonzero(~self.active)[0])
+        self.active[slot] = True
+        self._slot_of[rid] = slot
+        if self.sticky and rid in self._ever_poisoned:
+            self.poisoned.add(rid)
+        return np.asarray([9000 + rid], np.int32)
+
+    def step(self):
+        self.steps += 1
+        return np.arange(self.pcfg.max_requests, dtype=np.int32) * 1000 \
+            + self.steps
+
+    def nonfinite_rids(self) -> list:
+        return [rid for rid in sorted(self.poisoned)
+                if rid in self._slot_of]
+
+    def poison_kv(self, rid) -> None:
+        self.poisoned.add(rid)
+        self._ever_poisoned.add(rid)
+
+    def finish(self, rid) -> None:
+        slot = self._slot_of.pop(rid)
+        self.alloc.free(rid)
+        self.active[slot] = False
+        self.poisoned.discard(rid)    # poison dies with the freed pages
+
+    def slot_of(self, rid) -> int:
+        return self._slot_of[rid]
+
+
+def _pcfg():
+    return PagedCacheConfig(page_size=4, num_pages=4, max_requests=2,
+                            max_pages_per_seq=2)
+
+
+def test_scheduler_quarantines_once_then_recovers():
+    engine = PoisonableEngine(_pcfg())
+    sched = ContinuousScheduler(engine, quarantine=True)
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    engine.poison_kv(0)               # decode hit NaN logits for rid 0
+    while sched.queue or sched._live:
+        sched.step()
+    toks = sched.drain()
+    assert sched.quarantined == 1 and sched.failed == 0
+    assert sorted(toks) == [0, 1, 2]  # the victim completed on retry
+    assert len(toks[0]) == 3
+    engine.alloc.check()
+    assert engine.alloc.n_free == engine.pcfg.num_pages
+    assert sched.stats()["quarantined"] == 1
+
+
+def test_scheduler_fails_twice_poisoned_request():
+    engine = PoisonableEngine(_pcfg(), sticky=True)
+    sched = ContinuousScheduler(engine, quarantine=True)
+    reqs = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new=3)
+            for i in range(3)]
+    for r in reqs:
+        sched.submit(r)
+    sched.step()
+    engine.poison_kv(0)               # this one re-poisons every admission
+    while sched.queue or sched._live:
+        sched.step()
+    toks = sched.drain()
+    assert sched.quarantined == 1 and sched.failed == 1
+    assert sched.completions[0].failed and sched.completions[0].tokens is None
+    assert sorted(toks) == [1, 2]     # failed rid excluded, others clean
+    engine.alloc.check()              # no page leaked through the eviction
+
+
+def test_run_retry_after_completes_under_backpressure():
+    engine = PoisonableEngine(_pcfg())
+    sched = ContinuousScheduler(engine, queue_limit=1)
+    trace = [Request(rid=i, prompt=np.zeros(2, np.int32), max_new=2,
+                     arrival=0) for i in range(6)]
+    toks = sched.run(trace)
+    assert sorted(toks) == list(range(6))      # nothing silently dropped
+    st = sched.stats()
+    assert st["rejected"] > 0 and st["resubmitted"] == st["rejected"]
+    assert 0 < st["rejected_frac"] < 1
+    assert st["submitted"] == 6 + st["resubmitted"]
+    # rejected arrivals pay their wait: latency includes the backpressure
+    assert max(sched.latencies) > min(sched.latencies)
+    engine.alloc.check()
+
+
+def test_submit_sets_retry_after_hint():
+    sched = ContinuousScheduler(PoisonableEngine(_pcfg()), queue_limit=2)
+    for i in range(5):
+        sched.submit(Request(rid=i, prompt=np.zeros(1, np.int32), max_new=1))
+    assert sched.rejected == 3 and sched.retry_after >= 1
+    assert sched.stats()["rejected_frac"] == pytest.approx(3 / 5)
+
+
+# ---------------------------------------------------------------------------
+# the serve-side injector
+# ---------------------------------------------------------------------------
+
+def test_serve_injector_page_exhaust_backpressure():
+    engine = PoisonableEngine(_pcfg())
+    plan = FaultPlan(events=(
+        FaultEvent(step=0, kind="page_exhaust", duration=3),))
+    inj = ServeFaultInjector(plan, engine)
+    sched = ContinuousScheduler(engine, on_tick=inj.on_tick)
+    toks = sched.run([Request(rid=0, prompt=np.zeros(2, np.int32),
+                              max_new=2, arrival=0)])
+    assert inj.exhausted == 1
+    assert len(toks[0]) == 2
+    # admission had to wait for the hold to release at tick 3
+    assert sched.completions[0].admitted >= 3
+    inj.release_all()
+    engine.alloc.check()
+    assert engine.alloc.n_free == engine.pcfg.num_pages
+
+
+def test_serve_injector_logit_poison_drives_quarantine():
+    engine = PoisonableEngine(_pcfg())
+    plan = FaultPlan(events=(
+        FaultEvent(step=1, kind="logit_poison"),))
+    inj = ServeFaultInjector(plan, engine)
+    sched = ContinuousScheduler(engine, quarantine=True,
+                                on_tick=inj.on_tick)
+    toks = sched.run([Request(rid=i, prompt=np.zeros(2, np.int32),
+                              max_new=3, arrival=0) for i in range(2)])
+    assert inj.poisoned == 1
+    assert sched.quarantined == 1 and sched.failed == 0
+    assert sorted(toks) == [0, 1]
+    inj.release_all()
+    engine.alloc.check()
+
+
+def test_serve_injector_partial_exhaust_releases_on_time():
+    engine = PoisonableEngine(_pcfg())
+    plan = FaultPlan(events=(
+        FaultEvent(step=0, kind="page_exhaust", duration=2, param=3.0),))
+    inj = ServeFaultInjector(plan, engine)
+    sched = ContinuousScheduler(engine, on_tick=inj.on_tick)
+    assert engine.alloc.n_free == 4
+    sched.step()                      # tick 0: hold 3 of 4 pages
+    assert engine.alloc.n_free == 1
+    sched.step()
+    sched.step()                      # tick 2: hold expires on entry
+    assert engine.alloc.n_free == 4
+    inj.release_all()
+    engine.alloc.check()
+
+
+# ---------------------------------------------------------------------------
+# DROPPED sanity shared with the delivery tests
+# ---------------------------------------------------------------------------
+
+def test_apply_to_taus_bounds():
+    plan = FaultPlan.random(7, steps=20, workers=3, kinds=("crash", "rejoin",
+                                                           "delay", "drop"))
+    base = np.zeros((20, 3), np.int32)
+    out = plan.apply_to_taus(base, tau_max=4)
+    assert out.dtype == np.int32
+    live = out[out != DROPPED]
+    assert live.size == 0 or (live.min() >= 0 and live.max() <= 4)

@@ -12,6 +12,7 @@ import os
 import subprocess
 import sys
 
+import numpy as np
 import pytest
 
 # Triage of the seed failures: the thresholds never ran — the trainer exits
@@ -82,6 +83,64 @@ def test_async_resume_restores_engine_state(tmp_path):
     out = run(16)
     assert "resumed from step 8" in out, out[-2000:]
     assert "final loss" in out
+
+
+def _losses_by_step(out: str) -> dict:
+    """Parse ``step N loss X`` lines; the LAST occurrence per step wins
+    (a killed run replays steps since its checkpoint after the restart)."""
+    losses = {}
+    for line in out.splitlines():
+        if line.startswith("step"):
+            parts = line.split()
+            losses[int(parts[1])] = float(parts[3])
+    return losses
+
+
+@pytest.mark.slow
+def test_supervisor_restarts_sigkill_and_matches_oracle(tmp_path):
+    """The tentpole end-to-end claim: a SIGKILL mid-run (from a fault plan)
+    is survived by the supervisor — the child restarts from the latest
+    valid checkpoint, and because data/taus/rings are all deterministic in
+    (seed, step), the recovered trajectory is step-for-step the one an
+    uninterrupted run produces (paper ``crash`` + recovery semantics)."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(
+        os.path.join(os.path.dirname(__file__), "..", "src"))
+    env.pop("XLA_FLAGS", None)
+    plan = str(tmp_path / "plan.json")
+    subprocess.run([sys.executable, "-m", "repro.faults.plan",
+                    "--out", plan, "--kill-at", "9"],
+                   env=env, check=True, timeout=120)
+    train = ["--arch", "qwen3-1.7b-smoke", "--steps", "16", "--batch", "8",
+             "--seq", "32", "--lr", "0.02", "--sync", "async",
+             "--devices", "2", "--tau-max", "2",
+             "--async-schedule", "roundrobin", "--log-every", "1",
+             "--ckpt-dir", str(tmp_path / "ckpt"), "--ckpt-every", "4"]
+    sup = subprocess.run(
+        [sys.executable, "-m", "repro.launch.supervisor",
+         "--max-restarts", "2", "--backoff", "0.1",
+         "--fault-plan", plan, "--", *train],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert sup.returncode == 0, (sup.stdout[-2000:], sup.stderr[-2000:])
+    assert "fault: SIGKILL at step 9" in sup.stdout
+    assert "resumed from step 8" in sup.stdout, sup.stdout[-2000:]
+    assert "[supervisor] child completed on attempt 1" in sup.stdout
+
+    # the oracle: same plan, but --fault-attempt 1 means the kill (an
+    # attempt-0 event) never fires — one uninterrupted run
+    oracle = subprocess.run(
+        [sys.executable, "-m", "repro.launch.train", *train[:-4],
+         "--ckpt-dir", str(tmp_path / "ckpt_oracle"), "--ckpt-every", "4",
+         "--fault-plan", plan, "--fault-attempt", "1"],
+        env=env, capture_output=True, text=True, timeout=900)
+    assert oracle.returncode == 0, (oracle.stdout[-2000:],
+                                    oracle.stderr[-2000:])
+    got, want = _losses_by_step(sup.stdout), _losses_by_step(oracle.stdout)
+    assert set(got) == set(want) == set(range(16))
+    for t in range(16):
+        assert abs(got[t] - want[t]) < 1e-4, (t, got[t], want[t])
+    final = float(sup.stdout.split("final loss")[1].split()[0])
+    assert np.isfinite(final)
 
 
 @pytest.mark.slow
