@@ -1,0 +1,72 @@
+"""Static-analysis acceptance rows: the analyzer itself as a bench gate.
+
+Runs the `repro.analysis` CLI (lint + ring model checker + jaxpr audit) in
+a subprocess — the audit re-traces every public entry point, which must
+not inherit this process's already-initialized jax — and converts its JSON
+report into bench rows:
+
+  * ``accept/analysis_clean`` — PASS iff the CLI exits 0, i.e. every
+    finding is either fixed or justified in ``analysis/baseline.json``.
+    The us column is the end-to-end analyzer wall time.
+  * ``analysis/bytes_on_wire_<strategy>`` — the jaxpr-model bytes/step for
+    each audited sync strategy (the us column carries the byte count so
+    the communication-reduction trajectory is tracked across PRs; the
+    compressed strategies must stay strictly below ``sync``).
+
+``BENCH_SIM_SMOKE=1`` passes ``--fast --no-compile``: trimmed ring spaces
+and trace-only donation checks, same pass/fail semantics.
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+import tempfile
+import time
+
+from benchmarks.common import row
+
+SMOKE = bool(os.environ.get("BENCH_SIM_SMOKE"))
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def run() -> list:
+    with tempfile.TemporaryDirectory() as td:
+        report_path = os.path.join(td, "analysis.json")
+        cmd = [sys.executable, "-m", "repro.analysis", "--all",
+               "--baseline", "analysis/baseline.json",
+               "--json", report_path]
+        if SMOKE:
+            cmd += ["--fast", "--no-compile"]
+        env = dict(os.environ)
+        env["PYTHONPATH"] = os.path.join(REPO, "src") + os.pathsep \
+            + env.get("PYTHONPATH", "")
+        t0 = time.perf_counter()
+        proc = subprocess.run(cmd, cwd=REPO, env=env, capture_output=True,
+                              text=True, timeout=1800)
+        dt_us = (time.perf_counter() - t0) * 1e6
+        if not os.path.exists(report_path):
+            raise RuntimeError(
+                f"analysis CLI produced no report (exit {proc.returncode}):\n"
+                f"{proc.stdout[-2000:]}\n{proc.stderr[-2000:]}")
+        with open(report_path) as fh:
+            report = json.load(fh)
+
+    new = report.get("new", [])
+    n_total = len(report.get("findings", []))
+    clean = proc.returncode == 0 and not new
+    verdict = (f"PASS({n_total} findings, all baselined)" if clean
+               else f"FAIL({len(new)} new findings)")
+    rows = [row("accept/analysis_clean", dt_us, verdict)]
+    strat = report.get("info", {}).get("audit", {}) \
+                  .get("bytes_on_wire_by_strategy", {})
+    for name in sorted(strat):
+        rows.append(row(f"analysis/bytes_on_wire_{name}", float(strat[name]),
+                        "jaxpr-model bytes/step"))
+    if not clean:
+        for f in new[:5]:
+            print(f"NEW {f.get('rule')} {f.get('where')}: {f.get('detail')}",
+                  file=sys.stderr)
+        raise RuntimeError(f"analysis found {len(new)} unbaselined findings")
+    return rows

@@ -26,6 +26,7 @@ MODULES = [
     "benchmarks.bench_kernels",
     "benchmarks.bench_serve",
     "benchmarks.bench_faults",
+    "benchmarks.bench_analysis",
     "benchmarks.bench_roofline",
 ]
 

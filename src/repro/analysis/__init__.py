@@ -1,0 +1,21 @@
+"""Static-analysis subsystem: prove hot-path properties without running.
+
+Three passes, one CLI (``python -m repro.analysis``), one checked-in
+baseline (``analysis/baseline.json``):
+
+  * `repro.analysis.audit` — trace every public jitted entry point
+    (`repro.analysis.entrypoints`) to a jaxpr: collective inventory +
+    bytes-on-wire per sync strategy (compressed must beat dense),
+    callback/host-transfer detection, donation realization, retrace
+    hazards.
+  * `repro.analysis.rings` — exhaustive bounded model checker for the
+    delivery-ring and version-ring index arithmetic: exactly-once
+    delivery, no slot aliasing at capacity tau_max + 1, crash/rejoin
+    mass conservation, serving staleness <= tau_serve.
+  * `repro.analysis.lint` — AST rules for per-step host syncs, PRNG key
+    reuse, np-on-traced, Pallas tile alignment, missing donation.
+
+CI runs all three; only findings whose fingerprint is absent from the
+baseline fail the lane (`repro.analysis.findings`).
+"""
+from repro.analysis.findings import Finding, Report  # noqa: F401

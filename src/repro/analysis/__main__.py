@@ -1,0 +1,119 @@
+"""CLI: ``python -m repro.analysis --all --baseline analysis/baseline.json``.
+
+Runs the selected passes (``--lint`` / ``--audit`` / ``--rings``, or
+``--all``), diffs the findings against the checked-in baseline, prints a
+human summary, optionally writes the full findings JSON (``--json`` — the
+CI artifact), and exits nonzero iff there are NEW findings — fingerprints
+not in the baseline.  ``--update-baseline`` rewrites the baseline to
+accept exactly the current findings (review the diff like any code
+change).
+
+``--devices N`` forces N host devices (XLA_FLAGS, set before jax imports)
+so the audited collectives carry real p > 1 avals; the default single
+device preserves the between-strategy byte ordering at 1/p scale.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+
+def _parse():
+    ap = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description="static analysis: jaxpr audit, ring model checker, "
+                    "AST lint")
+    ap.add_argument("--all", action="store_true", help="run every pass")
+    ap.add_argument("--lint", action="store_true")
+    ap.add_argument("--audit", action="store_true")
+    ap.add_argument("--rings", action="store_true")
+    ap.add_argument("--baseline", default="analysis/baseline.json",
+                    help="accepted-findings file (missing == empty)")
+    ap.add_argument("--update-baseline", action="store_true",
+                    help="rewrite the baseline to accept current findings")
+    ap.add_argument("--json", default="",
+                    help="write the full findings/inventory JSON here")
+    ap.add_argument("--devices", type=int, default=0,
+                    help="force N host devices for the audit meshes")
+    ap.add_argument("--no-compile", action="store_true",
+                    help="skip the donation-audit compiles (trace only)")
+    ap.add_argument("--fast", action="store_true",
+                    help="trimmed ring spaces (bench smoke mode)")
+    ap.add_argument("--max-p", type=int, default=4,
+                    help="ring checker worker bound (exhaustive <= 4)")
+    ap.add_argument("--max-tau", type=int, default=3,
+                    help="ring checker staleness bound (exhaustive <= 3)")
+    return ap.parse_args()
+
+
+def main() -> int:
+    args = _parse()
+    if not (args.all or args.lint or args.audit or args.rings):
+        args.all = True
+    if args.devices > 1:
+        os.environ["XLA_FLAGS"] = (
+            os.environ.get("XLA_FLAGS", "")
+            + f" --xla_force_host_platform_device_count={args.devices}")
+
+    # jax (and everything that imports it) only after XLA_FLAGS is set
+    from repro.analysis.findings import Report, load_baseline, write_baseline
+
+    report = Report()
+    timings = {}
+    if args.all or args.lint:
+        from repro.analysis import lint
+        t0 = time.time()
+        report.extend(lint.run())
+        timings["lint"] = round(time.time() - t0, 1)
+    if args.all or args.rings:
+        from repro.analysis import rings
+        t0 = time.time()
+        report.extend(rings.run(max_p=args.max_p, max_tau=args.max_tau,
+                                fast=args.fast))
+        timings["rings"] = round(time.time() - t0, 1)
+    if args.all or args.audit:
+        from repro.analysis import audit
+        t0 = time.time()
+        report.extend(audit.run(
+            compile_donation=not args.no_compile,
+            data_parallel=max(args.devices, 1)))
+        timings["audit"] = round(time.time() - t0, 1)
+    report.info["timings_s"] = timings
+
+    if args.update_baseline:
+        write_baseline(args.baseline, report.findings)
+        print(f"baseline updated: {args.baseline} "
+              f"({len(report.findings)} accepted findings)")
+        return 0
+
+    baseline = load_baseline(args.baseline)
+    new = report.new_findings(baseline)
+    if args.json:
+        os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
+        with open(args.json, "w") as fh:
+            json.dump(report.to_json(baseline), fh, indent=1, default=str)
+
+    n_base = len(report.findings) - len(new)
+    for pass_name, t in timings.items():
+        print(f"  {pass_name}: {t}s")
+    if "audit" in report.info:
+        strat = report.info["audit"]["bytes_on_wire_by_strategy"]
+        print("bytes on wire by strategy (jaxpr model):")
+        for k in sorted(strat, key=strat.get):
+            print(f"  {k:24s} {strat[k]:>14.0f}")
+    print(f"findings: {len(report.findings)} total, {n_base} baselined, "
+          f"{len(new)} NEW")
+    for f in new:
+        print(f"  NEW {f}")
+    if new:
+        print(f"fail: {len(new)} finding(s) not in {args.baseline} — fix "
+              f"them or justify via --update-baseline")
+        return 1
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

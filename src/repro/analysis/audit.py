@@ -1,0 +1,266 @@
+"""Jaxpr auditor: trace every registered entry point and check what ships.
+
+Four checks over `repro.analysis.entrypoints`' registry:
+
+  * **collective inventory** — walk each traced jaxpr (including every
+    sub-jaxpr: shard_map bodies, scan bodies, cond branches) and count the
+    collective primitives with their bytes-on-wire.  The byte model matches
+    `repro.launch.dryrun.collective_bytes`: an all-reduce/psum moves ~2x
+    its payload on a ring, gathers/permutes ~1x their *output* (which
+    already carries the axis-size factor).  The point of the inventory is
+    the *between-strategy ordering at equal scale*: the compressed sync
+    strategies (topk_ef, onebit_ef) must put strictly fewer bytes on the
+    wire than the dense ``sync`` baseline — the paper's communication
+    reduction, checked against the programs actually traced, not the prose.
+  * **callback / host-sync detector** — no ``pure_callback`` /
+    ``io_callback`` / debug callback primitives anywhere in a hot-path
+    jaxpr: a callback is a device->host round-trip per step.
+  * **donation audit** — every entry declaring ``donate_argnums`` is
+    AOT-compiled and must realize a nonzero input/output alias
+    (``memory_analysis().alias_size_in_bytes``): donation that silently
+    fails to alias doubles peak memory exactly where it was promised not
+    to.
+  * **retrace-hazard check** — each entry is built twice (and, where the
+    registry provides a ``variant``, with a config that must not change
+    the program: an async schedule seed, a simulator knob value) and the
+    jaxprs are hashed after alpha-renaming; differing hashes mean the
+    builder bakes per-config values into the trace — one recompile per
+    config at production scale.
+
+`train/exact` is GSPMD: its gradient all-reduce is inserted by the
+compiler, so it does NOT appear in the jaxpr inventory (the manual
+``elastic/sync`` entry is the dense-wire baseline instead); its compiled
+HLO is still measured via `dryrun.collective_bytes` and reported in info.
+"""
+from __future__ import annotations
+
+import hashlib
+import re
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Report
+
+#: jaxpr-level collective primitives and their ring-traffic factors
+#: (psum ~ all-reduce: 2x payload; gathers/permutes: 1x their output)
+COLLECTIVE_FACTORS = {
+    "psum": 2.0, "psum2": 2.0, "pmax": 2.0, "pmin": 2.0,
+    "all_gather": 1.0, "all_to_all": 1.0, "ppermute": 1.0,
+    "reduce_scatter": 1.0, "pgather": 1.0,
+}
+
+CALLBACK_PRIMS = ("pure_callback", "io_callback", "debug_callback",
+                  "callback")
+
+
+def _f(rule, where, detail):
+    return Finding(pass_name="audit", rule=rule, where=where, detail=detail)
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking
+# ---------------------------------------------------------------------------
+
+def iter_eqns(jaxpr):
+    """Depth-first over every equation, descending into sub-jaxprs held in
+    eqn params (scan/while/cond bodies, shard_map/pjit inner jaxprs)."""
+    for eqn in jaxpr.eqns:
+        yield eqn
+        for sub in _sub_jaxprs(eqn):
+            yield from iter_eqns(sub)
+
+
+def _sub_jaxprs(eqn):
+    for v in eqn.params.values():
+        for j in _as_jaxprs(v):
+            yield j
+
+
+def _as_jaxprs(v):
+    if hasattr(v, "eqns"):                       # Jaxpr
+        return [v]
+    if hasattr(v, "jaxpr"):                      # ClosedJaxpr
+        return [v.jaxpr]
+    if isinstance(v, (list, tuple)):
+        out = []
+        for item in v:
+            out.extend(_as_jaxprs(item))
+        return out
+    return []
+
+
+def _aval_bytes(aval) -> int:
+    try:
+        return int(np.prod(aval.shape, dtype=np.int64)
+                   * np.dtype(aval.dtype).itemsize)
+    except Exception:                            # abstract tokens etc.
+        return 0
+
+
+def collective_inventory(jaxpr) -> dict:
+    """{prim: {"count": n, "bytes": weighted-bytes}} plus a total."""
+    inv: dict = {}
+    total = 0.0
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if name not in COLLECTIVE_FACTORS:
+            continue
+        b = COLLECTIVE_FACTORS[name] * sum(
+            _aval_bytes(v.aval) for v in eqn.outvars)
+        slot = inv.setdefault(name, {"count": 0, "bytes": 0.0})
+        slot["count"] += 1
+        slot["bytes"] += b
+        total += b
+    inv["wire_bytes"] = total
+    return inv
+
+
+def find_callbacks(jaxpr) -> list:
+    hits = []
+    for eqn in iter_eqns(jaxpr):
+        name = eqn.primitive.name
+        if any(c in name for c in CALLBACK_PRIMS):
+            hits.append(name)
+    return hits
+
+
+_VAR_RE = re.compile(r"\b[a-z]+(?=:)|\b[a-z]+\b(?=[, )\]])")
+
+
+def jaxpr_hash(jaxpr) -> str:
+    """Structural hash of a jaxpr.  Trace-local variable names are already
+    assigned deterministically per trace (a, b, c, ...), so two traces of
+    the same program stringify identically; hashing the text is enough."""
+    return hashlib.sha1(str(jaxpr).encode()).hexdigest()[:16]
+
+
+# ---------------------------------------------------------------------------
+# per-entry audits
+# ---------------------------------------------------------------------------
+
+def trace_entry(entry):
+    import jax
+    fn, args = entry.build()
+    return jax.make_jaxpr(fn)(*args)
+
+
+def audit_entry(entry, *, compile_donation: bool = True) -> tuple:
+    """(findings, info) for one registry entry."""
+    import jax
+
+    findings: list = []
+    closed = trace_entry(entry)
+    inv = collective_inventory(closed.jaxpr)
+    info = {"collectives": inv, "jaxpr_hash": jaxpr_hash(closed.jaxpr),
+            "eqns": sum(1 for _ in iter_eqns(closed.jaxpr))}
+
+    for name in find_callbacks(closed.jaxpr):
+        findings.append(_f("callback-in-hot-path", entry.name,
+                           f"host callback primitive '{name}' inside a "
+                           f"per-step program"))
+
+    # retrace: a second build, and the registry's must-not-retrace variant
+    h2 = jaxpr_hash(trace_entry(entry).jaxpr)
+    if h2 != info["jaxpr_hash"]:
+        findings.append(_f("retrace-hazard", entry.name,
+                           "two builds of the same config trace to "
+                           "different jaxprs (nondeterministic builder)"))
+    if entry.variant is not None:
+        fn_v, args_v = entry.variant()
+        hv = jaxpr_hash(jax.make_jaxpr(fn_v)(*args_v).jaxpr)
+        if hv != info["jaxpr_hash"]:
+            findings.append(_f(
+                "retrace-hazard", entry.name,
+                "a config variant that must share the program traces to "
+                "a different jaxpr (per-config recompile hazard)"))
+
+    if compile_donation and entry.donate:
+        fn, args = entry.build()
+        try:
+            compiled = jax.jit(fn, donate_argnums=entry.donate) \
+                .lower(*args).compile()
+        except Exception as e:  # noqa: BLE001 — report, don't crash the CLI
+            findings.append(_f("donation-uncompilable", entry.name,
+                               f"{type(e).__name__} while compiling with "
+                               f"declared donate_argnums={entry.donate}"))
+        else:
+            ma = compiled.memory_analysis()
+            alias = getattr(ma, "alias_size_in_bytes", 0)
+            info["alias_bytes"] = int(alias)
+            if alias <= 0:
+                findings.append(_f(
+                    "donation-unrealized", entry.name,
+                    f"donate_argnums={entry.donate} declared but the "
+                    f"compiled program aliases 0 bytes"))
+            from repro.launch.dryrun import collective_bytes
+            info["hlo_collective_bytes"] = collective_bytes(
+                compiled.as_text())
+    return findings, info
+
+
+# ---------------------------------------------------------------------------
+# cross-entry checks
+# ---------------------------------------------------------------------------
+
+#: compressed sync strategies that must strictly beat the dense baseline
+MUST_BEAT_SYNC = ("topk_ef", "onebit_ef")
+
+
+def wire_comparison(inventories: dict) -> tuple:
+    """Strategy-tagged wire bytes + the compressed-beats-dense findings."""
+    findings = []
+    by_strategy = {}
+    for name, info in inventories.items():
+        strat = info.get("strategy")
+        if strat:
+            by_strategy[strat] = info["collectives"]["wire_bytes"]
+    sync = by_strategy.get("sync")
+    if sync is not None:
+        for strat in MUST_BEAT_SYNC:
+            b = by_strategy.get(strat)
+            if b is not None and not b < sync:
+                findings.append(_f(
+                    "compressed-not-better", f"strategy/{strat}",
+                    f"bytes-on-wire {b:.0f} >= dense sync baseline "
+                    f"{sync:.0f} — the communication reduction is gone"))
+        if sync <= 0:
+            findings.append(_f("empty-baseline", "strategy/sync",
+                               "dense sync baseline traces to zero wire "
+                               "bytes — inventory is not seeing the "
+                               "collectives"))
+    return findings, by_strategy
+
+
+def run(registry=None, *, groups=None, compile_donation: bool = True,
+        data_parallel: int = 1) -> Report:
+    """Audit every (selected) entry point; returns a Report whose
+    ``info["audit"]`` carries the full per-entry inventory."""
+    from repro.analysis import entrypoints as EP
+
+    if registry is None:
+        registry = EP.make_registry(data_parallel)
+    rep = Report()
+    inventories: dict = {}
+    for entry in registry:
+        if groups and entry.group not in groups:
+            continue
+        try:
+            findings, info = audit_entry(
+                entry, compile_donation=compile_donation)
+        except Exception as e:  # noqa: BLE001 — an unbuildable entry is a finding
+            rep.findings.append(_f(
+                "entrypoint-broken", entry.name,
+                f"{type(e).__name__} while tracing: {e}"))
+            continue
+        info["strategy"] = entry.strategy
+        info["group"] = entry.group
+        inventories[entry.name] = info
+        rep.findings += findings
+    cross, by_strategy = wire_comparison(inventories)
+    rep.findings += cross
+    rep.info["audit"] = {
+        "entries": inventories,
+        "bytes_on_wire_by_strategy": by_strategy,
+        "data_parallel": data_parallel,
+    }
+    return rep

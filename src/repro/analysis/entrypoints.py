@@ -1,0 +1,312 @@
+"""Registry of every public jitted entry point, at audit (smoke) scale.
+
+One place that knows how to *build* each hot-path program the repo ships —
+the GSPMD train step, the shard_map elastic step per sync strategy, the
+bounded-staleness async step per (tau_max, compressor), the simulator's
+per-kind run functions, and the serving prefill/decode steps (dense and
+paged).  `repro.analysis.audit` traces these to jaxprs (collective
+inventory, callback/transfer detection, retrace hashing) and compiles the
+ones with a donation contract; `tests/test_analysis.py` pins the resulting
+inventory as a golden file.
+
+Builders are lazy (`EntryPoint.build()`) so the CLI can audit a subset
+without paying for the rest, and deterministic so two builds of the same
+entry must trace to the identical jaxpr (the retrace-hazard check).  Where
+a config knob must NOT change the program (an async schedule seed, a
+simulator knob value), ``variant`` builds that differently-configured
+twin; the audit fails if the twin's jaxpr hash drifts — that is exactly a
+recompile-per-config hazard.
+
+Scale: the smallest same-family config (`reduced()` — 2 layers, d<=128)
+with a (data_parallel, 1) host mesh.  The *structure* of the program —
+which collectives run, what hits the wire per strategy, what is donated —
+is scale-independent; only the byte counts scale, and those are compared
+*between* strategies at equal scale.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+SMOKE_ARCH = "qwen3-1.7b"
+BATCH, SEQ = 4, 32
+
+
+@dataclass(frozen=True)
+class EntryPoint:
+    """One auditable jitted program.
+
+    ``build()`` returns ``(fn, args)`` — the raw step function and a tuple
+    of (abstract or concrete) example arguments.  ``donate`` is the
+    donation contract of the production jit site; entries with one are
+    compiled by the donation audit.  ``strategy`` tags entries that
+    participate in the per-strategy bytes-on-wire comparison.
+    """
+
+    name: str
+    group: str                       # train | elastic | async | sim | serve
+    build: callable
+    donate: tuple = ()
+    strategy: str | None = None
+    compile_entry: bool = False
+    variant: callable | None = None  # must trace to the SAME jaxpr
+    notes: str = ""
+
+
+def _smoke_cfg():
+    from repro.configs import get_config
+    return get_config(SMOKE_ARCH).reduced()
+
+
+def _mesh(data_parallel: int):
+    from repro.jax_compat import make_mesh
+    return make_mesh((data_parallel, 1), ("data", "model"))
+
+
+def _train_fixture(data_parallel: int):
+    from repro.dist import sharding as SH
+    from repro.models import transformer as TF
+    from repro.models.params import abstract_params, param_specs
+    from repro.optim import momentum
+    cfg = _smoke_cfg()
+    mesh = _mesh(data_parallel)
+    flags = TF.RunFlags(remat=False)
+    defs = TF.model_defs(cfg)
+    pspecs = param_specs(defs, SH.axis_sizes(mesh))
+    ab_params = abstract_params(defs)
+    opt = momentum(1e-2, 0.9)
+    ab_opt = jax.eval_shape(opt.init, ab_params)
+    batch = {"tokens": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32),
+             "labels": jax.ShapeDtypeStruct((BATCH, SEQ), jnp.int32)}
+    return cfg, mesh, flags, pspecs, ab_params, opt, ab_opt, batch
+
+
+def _build_train_exact(data_parallel: int):
+    from repro.dist.train import make_train_step
+    cfg, _, flags, _, ab_params, opt, ab_opt, batch = \
+        _train_fixture(data_parallel)
+    return make_train_step(cfg, opt, flags), (ab_params, ab_opt, batch)
+
+
+def _build_elastic(strategy: str, data_parallel: int, *,
+                   track_gap: bool = False):
+    from repro.core.scheduler import SyncConfig
+    from repro.dist import sharding as SH
+    from repro.dist.train import init_dist_sync_state, make_elastic_train_step
+    cfg, mesh, flags, pspecs, ab_params, opt, ab_opt, batch = \
+        _train_fixture(data_parallel)
+    scfg = SyncConfig(strategy=strategy, axis_names=SH.data_axes(mesh),
+                      gate="static" if strategy == "elastic" else "norm",
+                      track_gap=track_gap)
+    ab_sync = jax.eval_shape(
+        lambda: init_dist_sync_state(scfg, mesh, ab_params))
+    step = make_elastic_train_step(cfg, opt, mesh, scfg, pspecs, flags)
+    return step, (ab_params, ab_opt, ab_sync, batch)
+
+
+def _build_async(tau_max: int, compressor: str, data_parallel: int,
+                 seed: int = 0):
+    from repro.dist.async_engine import (AsyncConfig, init_async_state,
+                                         make_async_train_step)
+    cfg, mesh, flags, pspecs, ab_params, opt, ab_opt, batch = \
+        _train_fixture(data_parallel)
+    acfg = AsyncConfig(tau_max=tau_max, schedule="uniform",
+                       compressor=compressor,
+                       error_feedback=compressor != "none",
+                       topk_ratio=1 / 8, horizon=64, seed=seed,
+                       track_gap=False)
+    ab_state = jax.eval_shape(
+        lambda: init_async_state(acfg, mesh, ab_params))
+    step = make_async_train_step(cfg, opt, mesh, acfg, pspecs, flags)
+    return step, (ab_params, ab_opt, ab_state, batch)
+
+
+SIM_KINDS = ("sync", "crash", "crash_subst", "omission", "async", "ef_comp",
+             "elastic_norm", "elastic_variance", "adversarial")
+_SIM_P, _SIM_T, _SIM_DIM = 4, 8, 8
+
+
+def _sim_relax(kind: str, *, beta: float = 0.8):
+    from repro.core import compression as C
+    from repro.core.sim_types import Relaxation
+    comp = C.topk_compressor(0.25) if kind == "ef_comp" else None
+    return Relaxation(kind=kind, f=1 if kind.startswith("crash")
+                      or kind == "omission" else 0,
+                      tau_max=2, compressor=comp, beta=beta,
+                      B_adv=0.5 if kind == "adversarial" else 0.0)
+
+
+def _build_sim(kind: str, *, beta: float = 0.8):
+    from repro.core.problems import Quadratic
+    from repro.core.sim_engine import _build_run, _knob_values
+    from repro.core.sim_types import make_schedule
+    problem = Quadratic(dim=_SIM_DIM, seed=0)
+    relax = _sim_relax(kind, beta=beta)
+    run = _build_run(problem, relax, _SIM_P, _SIM_T, False)
+    sched = make_schedule(relax, _SIM_P, _SIM_DIM, _SIM_T, seed=0)
+    per_step = jax.tree.map(jnp.asarray, sched.per_step)
+    per_run = jax.tree.map(jnp.asarray, sched.per_run)
+    args = (jnp.zeros(_SIM_DIM, jnp.float32), jnp.float32(0.05),
+            jax.random.PRNGKey(1), per_step, per_run, _knob_values(relax),
+            None)
+    return run, args
+
+
+def _serve_fixture():
+    from repro.models import transformer as TF
+    from repro.models.params import abstract_params
+    cfg = _smoke_cfg()
+    flags = TF.RunFlags(remat=False)
+    ab_params = abstract_params(TF.model_defs(cfg))
+    return cfg, flags, ab_params
+
+
+_SERVE_B, _SERVE_S = 2, 16
+
+
+def _build_prefill_dense():
+    from repro.dist.train import make_prefill_step
+    cfg, flags, ab_params = _serve_fixture()
+    step = make_prefill_step(cfg, _SERVE_S, flags)
+    batch = {"tokens": jax.ShapeDtypeStruct((_SERVE_B, _SERVE_S), jnp.int32)}
+    return step, (ab_params, batch)
+
+
+def _build_decode_dense():
+    from repro.dist.train import make_decode_step
+    from repro.models import transformer as TF
+    cfg, flags, ab_params = _serve_fixture()
+    ab_cache = jax.eval_shape(
+        lambda: TF.init_cache(cfg, _SERVE_B, _SERVE_S, flags))
+    tokens = jax.ShapeDtypeStruct((_SERVE_B, 1), jnp.int32)
+    return make_decode_step(cfg, flags), (ab_params, ab_cache, tokens)
+
+
+def _paged_fixture():
+    from repro.serve.paged_cache import PagedCacheConfig, init_page_pool
+    cfg, flags, ab_params = _serve_fixture()
+    pcfg = PagedCacheConfig(page_size=4, num_pages=8, max_requests=2,
+                            max_pages_per_seq=4)
+    pools = jax.eval_shape(
+        lambda: init_page_pool(cfg.n_layers, cfg.n_kv_heads or cfg.n_heads,
+                               cfg.d_model // cfg.n_heads, pcfg))
+    return cfg, flags, ab_params, pcfg, pools
+
+
+def _build_decode_paged():
+    from repro.serve.engine import make_paged_decode_step
+    cfg, flags, ab_params, pcfg, (kp, vp) = _paged_fixture()
+    r = pcfg.max_requests
+    step = make_paged_decode_step(cfg, pcfg, flags)
+    args = (ab_params, kp, vp,
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+            jax.ShapeDtypeStruct((r, pcfg.max_pages_per_seq), jnp.int32),
+            jax.ShapeDtypeStruct((r,), jnp.bool_),
+            jax.random.PRNGKey(0))
+    return step, args
+
+
+def _build_prefill_paged():
+    from repro.serve.engine import make_paged_prefill_step
+    cfg, flags, ab_params, pcfg, (kp, vp) = _paged_fixture()
+    bucket_pages = 2
+    step = make_paged_prefill_step(cfg, pcfg, bucket_pages, flags)
+    args = (ab_params, kp, vp,
+            jax.ShapeDtypeStruct((1, bucket_pages * pcfg.page_size),
+                                 jnp.int32),
+            jax.ShapeDtypeStruct((), jnp.int32),
+            jax.ShapeDtypeStruct((bucket_pages,), jnp.int32),
+            jax.random.PRNGKey(0))
+    return step, args
+
+
+def make_registry(data_parallel: int = 1) -> list:
+    """Every public jitted entry point at audit scale.
+
+    ``data_parallel`` sizes the host mesh's data axis — run the CLI with
+    ``--devices 2`` (forced host devices) for jaxprs whose collectives
+    carry real p > 1 avals; at p = 1 the *set* of collectives and the
+    between-strategy byte ordering are unchanged.
+    """
+    p = data_parallel
+    reg = [
+        EntryPoint(
+            "train/exact", "train", lambda: _build_train_exact(p),
+            donate=(0, 1), compile_entry=True,
+            notes="GSPMD data parallelism; the gradient all-reduce is "
+                  "compiler-inserted, so it is visible in compiled HLO "
+                  "only, not the jaxpr"),
+        EntryPoint(
+            "elastic/sync", "elastic", lambda: _build_elastic("exact", p),
+            donate=(0, 1, 2), strategy="sync", compile_entry=True,
+            notes="manual shard_map pmean — the dense-wire baseline every "
+                  "compressed strategy must beat"),
+        EntryPoint(
+            "elastic/topk_ef", "elastic",
+            lambda: _build_elastic("topk_ef", p),
+            donate=(0, 1, 2), strategy="topk_ef", compile_entry=True,
+            variant=lambda: _build_elastic("topk_ef", p)),
+        EntryPoint(
+            "elastic/onebit_ef", "elastic",
+            lambda: _build_elastic("onebit_ef", p),
+            donate=(0, 1, 2), strategy="onebit_ef", compile_entry=True),
+        EntryPoint(
+            "elastic/elastic", "elastic",
+            lambda: _build_elastic("elastic", p),
+            donate=(0, 1, 2), strategy="elastic", compile_entry=True,
+            notes="static gate, phase 0"),
+        EntryPoint(
+            "elastic/topk_ef+gap", "elastic",
+            lambda: _build_elastic("topk_ef", p, track_gap=True),
+            strategy="topk_ef+gap",
+            notes="track_gap=True costs a full-width pmean of the EF "
+                  "residual for the gap2 metric — kept OUT of the "
+                  "hot-path wire comparison on purpose"),
+        EntryPoint(
+            "async/tau0", "async", lambda: _build_async(0, "none", p),
+            donate=(0, 1, 2), strategy="async_tau0", compile_entry=True,
+            variant=lambda: _build_async(0, "none", p, seed=7),
+            notes="capacity-1 ring == synchronous; seed variant must not "
+                  "retrace (the tau table is state, not program)"),
+        EntryPoint(
+            "async/tau4", "async", lambda: _build_async(4, "none", p),
+            donate=(0, 1, 2), strategy="async_tau4", compile_entry=True,
+            variant=lambda: _build_async(4, "none", p, seed=7)),
+        EntryPoint(
+            "async/tau4_topk_ef", "async",
+            lambda: _build_async(4, "topk", p),
+            donate=(0, 1, 2), strategy="async_tau4_topk_ef",
+            compile_entry=True,
+            notes="compressed deposits are densified into the full-width "
+                  "ring and pmean'd dense — a known ROADMAP gap the "
+                  "golden inventory documents (not a wire win)"),
+        EntryPoint(
+            "serve/prefill_dense", "serve", _build_prefill_dense,
+            compile_entry=True),
+        EntryPoint(
+            "serve/decode_dense", "serve", _build_decode_dense,
+            donate=(1,), compile_entry=True),
+        EntryPoint(
+            "serve/prefill_paged", "serve", _build_prefill_paged,
+            donate=(1, 2), compile_entry=True),
+        EntryPoint(
+            "serve/decode_paged", "serve", _build_decode_paged,
+            donate=(1, 2), compile_entry=True),
+    ]
+    for kind in SIM_KINDS:
+        reg.append(EntryPoint(
+            f"sim/{kind}", "sim",
+            lambda kind=kind: _build_sim(kind),
+            variant=(lambda kind=kind: _build_sim(kind, beta=0.5))
+            if kind == "elastic_norm" else None,
+            notes="whole-run scan; knobs are traced floats, so knob "
+                  "changes must not retrace"))
+    return reg
+
+
+def by_name(registry: list) -> dict:
+    return {e.name: e for e in registry}

@@ -1,0 +1,321 @@
+"""AST lint for jax hot-path hazards.
+
+Static rules over the `src/repro` tree, scoped to **hot-path code**:
+functions that are (or build) per-step jitted programs — step/run/prefill/
+decode functions, the bodies nested inside ``make_*``/``_build_*``
+factories, and anything decorated/wrapped with ``jax.jit``.  A host sync
+in a test or a CLI driver is fine; the same call reachable from a per-step
+program is a per-step device->host round-trip.
+
+Rules:
+
+  * ``prng-key-reuse`` — a PRNG key variable passed to two or more
+    ``jax.random.*`` draws without an intervening ``split``/``fold_in``:
+    identical randomness where independent draws were intended.
+  * ``np-on-traced`` — ``np.*`` computation applied to hot-path values
+    (implicit device->host transfer + an untraced constant baked into the
+    program).  Shape/dtype-level helpers (``np.prod`` on shapes, dtype
+    constructors, ``np.arange`` of python ints) are whitelisted.
+  * ``host-sync-in-step`` — ``float(x)`` / ``int(x)`` / ``.item()`` /
+    ``np.asarray(x)`` / ``jax.device_get`` inside hot-path code: a
+    blocking transfer per step.
+  * ``pallas-tile-misalign`` — integer tile/block constants in Pallas
+    kernel call sites that are not multiples of the 128-wide lane dim
+    (the TPU/Mosaic layout unit; misaligned tiles silently re-layout).
+  * ``missing-donation`` — a ``jax.jit`` call site whose positional
+    target is a step/train/decode function but that declares no
+    ``donate_argnums``: the params/optimizer buffers are copied every
+    step instead of reused.
+
+Every finding is keyed ``path:qualname`` (line numbers carried for
+display only), so the checked-in baseline survives unrelated edits.
+"""
+from __future__ import annotations
+
+import ast
+import os
+
+from repro.analysis.findings import Finding, Report
+
+LANE = 128          # mosaic lane width: last-dim tiles must be multiples
+HOT_NAME_HINTS = ("step", "run", "body", "prefill", "decode", "train",
+                  "kernel", "fwd", "bwd", "loop")
+FACTORY_HINTS = ("make_", "_build_", "build_")
+# host-sync callables when applied to traced values (bool() is excluded:
+# it is overwhelmingly applied to compile-time python values like axis sets)
+HOST_SYNC_CALLS = {"float", "int"}
+HOST_SYNC_ATTRS = {"item", "tolist", "block_until_ready"}
+# np.* helpers that are shape/config-level, not data-path
+NP_WHITELIST = {"prod", "dtype", "int32", "int64", "float32", "float64",
+                "bool_", "uint32", "shape", "ndim", "iinfo", "finfo",
+                "ceil", "floor", "log2", "sqrt", "maximum", "minimum"}
+
+DEFAULT_ROOTS = ("src/repro",)
+SKIP_DIRS = {"analysis", "__pycache__"}
+
+
+def _f(rule, where, detail, line=0):
+    return Finding(pass_name="lint", rule=rule, where=where, detail=detail,
+                   line=line)
+
+
+def is_hot_name(name: str) -> bool:
+    low = name.lower()
+    return any(h in low for h in HOT_NAME_HINTS)
+
+
+def is_factory_name(name: str) -> bool:
+    return any(name.startswith(h) for h in FACTORY_HINTS)
+
+
+# ---------------------------------------------------------------------------
+# call-shape helpers
+# ---------------------------------------------------------------------------
+
+def _dotted(node) -> str:
+    """'jax.random.split' for an Attribute/Name chain, '' otherwise."""
+    parts = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return ".".join(reversed(parts))
+    return ""
+
+
+def _arg_names(call: ast.Call) -> list:
+    return [a.id for a in call.args if isinstance(a, ast.Name)]
+
+
+# ---------------------------------------------------------------------------
+# per-function rule visitors
+# ---------------------------------------------------------------------------
+
+def check_prng_reuse(fn: ast.FunctionDef, where: str) -> list:
+    """Key names consumed by >= 2 jax.random draws with no split between.
+
+    Linear scan in source order per key name: a ``jax.random.<draw>(key)``
+    marks the key used; a later draw of the same un-renewed key is the
+    finding; ``split``/``fold_in`` (or any reassignment of the name)
+    renews it.
+    """
+    findings = []
+    used: dict = {}
+    flagged: set = set()
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Assign):
+            for t in node.targets:
+                for n in ast.walk(t):
+                    if isinstance(n, ast.Name):
+                        used.pop(n.id, None)
+        if not isinstance(node, ast.Call):
+            continue
+        dn = _dotted(node.func)
+        if not dn.endswith(tuple(
+                ".random." + d for d in
+                ("normal", "uniform", "randint", "bernoulli", "categorical",
+                 "permutation", "choice", "gumbel", "truncated_normal"))) \
+                and not (dn.startswith(("jax.random.", "jrandom.", "jr."))
+                         and not dn.endswith(("split", "fold_in",
+                                              "PRNGKey", "key"))):
+            if dn.endswith(("split", "fold_in")):
+                for name in _arg_names(node):
+                    used.pop(name, None)
+            continue
+        for name in _arg_names(node)[:1]:       # key is arg 0 by convention
+            if name in used and (where, name) not in flagged:
+                findings.append(_f(
+                    "prng-key-reuse", where,
+                    f"key '{name}' consumed by two draws without split",
+                    line=node.lineno))
+                flagged.add((where, name))
+            used[name] = node.lineno
+    return findings
+
+
+def check_host_sync(fn: ast.FunctionDef, where: str) -> list:
+    findings = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = _dotted(node.func)
+        detail = None
+        if isinstance(node.func, ast.Name) \
+                and node.func.id in HOST_SYNC_CALLS and node.args \
+                and not isinstance(node.args[0], ast.Constant):
+            detail = f"{node.func.id}(...) forces a device->host sync"
+        elif isinstance(node.func, ast.Attribute) \
+                and node.func.attr in HOST_SYNC_ATTRS:
+            detail = f".{node.func.attr}() forces a device->host sync"
+        elif dn in ("np.asarray", "numpy.asarray", "np.array",
+                    "numpy.array", "jax.device_get"):
+            detail = f"{dn}(...) pulls a device value to host"
+        if detail:
+            findings.append(_f("host-sync-in-step", where, detail,
+                               line=node.lineno))
+    return findings
+
+
+def check_np_on_traced(fn: ast.FunctionDef, where: str) -> list:
+    """np.<fn>(x) on non-constant args inside hot-path code."""
+    findings = []
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        dn = _dotted(node.func)
+        if not dn.startswith(("np.", "numpy.")):
+            continue
+        tail = dn.split(".", 1)[1]
+        if tail.split(".")[0] in NP_WHITELIST \
+                or tail in ("asarray", "array"):  # host-sync rule's turf
+            continue
+        if node.args and not all(
+                isinstance(a, (ast.Constant, ast.Tuple)) for a in node.args):
+            findings.append(_f(
+                "np-on-traced", where,
+                f"{dn}(...) on a non-constant inside hot-path code — "
+                f"untraced host math", line=node.lineno))
+    return findings
+
+
+def check_pallas_tiles(tree: ast.Module, path: str) -> list:
+    """Pallas call sites: block/tile keyword constants must be multiples
+    of the 128 lane width (last dim)."""
+    findings = []
+    src_is_pallas = any(
+        isinstance(n, (ast.Import, ast.ImportFrom))
+        and "pallas" in ast.dump(n) for n in ast.walk(tree))
+    if not src_is_pallas:
+        return findings
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        for kw in node.keywords:
+            if kw.arg is None or not any(
+                    h in kw.arg for h in ("block", "tile", "lane")):
+                continue
+            vals = []
+            if isinstance(kw.value, ast.Constant) \
+                    and isinstance(kw.value.value, int):
+                vals = [kw.value.value]
+            elif isinstance(kw.value, ast.Tuple):
+                elts = [e.value for e in kw.value.elts
+                        if isinstance(e, ast.Constant)
+                        and isinstance(e.value, int)]
+                vals = elts[-1:]                 # lane dim = last
+            for v in vals:
+                if v >= 8 and v % LANE != 0:
+                    findings.append(_f(
+                        "pallas-tile-misalign", f"{path}:{kw.arg}",
+                        f"tile constant {v} is not a multiple of the "
+                        f"{LANE}-wide lane dim", line=node.lineno))
+    return findings
+
+
+def check_missing_donation(tree: ast.Module, path: str) -> list:
+    """jax.jit(step_like_fn) with no donate_argnums at src jit sites."""
+    findings = []
+    for node in ast.walk(tree):
+        if not isinstance(node, ast.Call):
+            continue
+        if _dotted(node.func) not in ("jax.jit", "jit"):
+            continue
+        if any(kw.arg == "donate_argnums" for kw in node.keywords):
+            continue
+        target = ""
+        if node.args:
+            a0 = node.args[0]
+            if isinstance(a0, ast.Name):
+                target = a0.id
+            elif isinstance(a0, ast.Call):
+                target = _dotted(a0.func).rsplit(".", 1)[-1]
+        if target.startswith(("make_train", "make_elastic", "make_async",
+                              "make_paged")) or target in (
+                "step", "train_step", "local_step"):
+            findings.append(_f(
+                "missing-donation", f"{path}:{target or '<lambda>'}",
+                "jit of a step function without donate_argnums — params/"
+                "state buffers are copied every step",
+                line=node.lineno))
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# hot-path scoping + file driver
+# ---------------------------------------------------------------------------
+
+def hot_functions(tree: ast.Module):
+    """(qualname, FunctionDef) for hot-path functions: step-named
+    functions anywhere, and every function nested inside a factory.
+    A factory itself (``make_*``/``_build_*``) is NOT scanned directly —
+    its body runs once at build time; only the closures it returns are
+    per-step code."""
+    out = []
+
+    def visit(node, prefix, inside_factory):
+        for child in ast.iter_child_nodes(node):
+            if isinstance(child, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                qual = f"{prefix}{child.name}"
+                factory = inside_factory or is_factory_name(child.name)
+                if not is_factory_name(child.name) and (
+                        is_hot_name(child.name)
+                        or (inside_factory
+                            and not child.name.startswith("_init"))):
+                    out.append((qual, child))
+                visit(child, qual + ".", factory)
+            elif isinstance(child, ast.ClassDef):
+                visit(child, f"{prefix}{child.name}.", inside_factory)
+            else:
+                visit(child, prefix, inside_factory)
+
+    visit(tree, "", False)
+    # dedupe nested hits (a hot fn inside a hot fn reports once, outermost)
+    seen: set = set()
+    uniq = []
+    for qual, fn in out:
+        if any(qual != q and qual.startswith(q + ".") for q, _ in out):
+            continue
+        if qual not in seen:
+            seen.add(qual)
+            uniq.append((qual, fn))
+    return uniq
+
+
+def lint_file(path: str, rel: str) -> list:
+    with open(path) as fh:
+        src = fh.read()
+    tree = ast.parse(src, filename=path)
+    findings = []
+    findings += check_pallas_tiles(tree, rel)
+    findings += check_missing_donation(tree, rel)
+    for qual, fn in hot_functions(tree):
+        where = f"{rel}:{qual}"
+        findings += check_prng_reuse(fn, where)
+        findings += check_host_sync(fn, where)
+        findings += check_np_on_traced(fn, where)
+    return findings
+
+
+def run(roots=DEFAULT_ROOTS, repo_root: str | None = None) -> Report:
+    rep = Report()
+    base = repo_root or os.getcwd()
+    n_files = 0
+    for root in roots:
+        top = os.path.join(base, root)
+        for dirpath, dirnames, filenames in os.walk(top):
+            dirnames[:] = [d for d in sorted(dirnames)
+                           if d not in SKIP_DIRS]
+            for name in sorted(filenames):
+                if not name.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, name)
+                rel = os.path.relpath(path, base)
+                try:
+                    rep.findings += lint_file(path, rel)
+                except SyntaxError as e:
+                    rep.findings.append(_f("unparseable", rel, str(e)))
+                n_files += 1
+    rep.info["lint"] = {"files": n_files,
+                        "findings": len(rep.findings)}
+    return rep

@@ -1,0 +1,517 @@
+"""Exhaustive model checker for the delivery-ring disciplines.
+
+`tests/test_delivery.py` samples the ring invariants with hypothesis; this
+module *enumerates* them: for every staleness schedule with ``tau <=
+tau_max`` (plus :data:`~repro.core.delivery.DROPPED` crash entries) up to a
+bounded horizon, it checks the exact index arithmetic the engines use —
+deposit at ``(t + tau) % capacity``, take at ``t % capacity``, capacity
+``tau_max + 1`` — and turns the sampled properties into checked theorems
+for the bounded model:
+
+  * **exactly-once delivery** — every non-dropped deposit is taken exactly
+    once, at exactly ``t + tau``;
+  * **deposit-before-take ordering** — a ``tau = 0`` message is visible to
+    the same step's take (the engines deposit before taking);
+  * **no slot aliasing** — two messages never share a live slot unless
+    they are due the same step (the accumulate-then-deliver case), which
+    is precisely what capacity ``tau_max + 1`` buys.  A *negative control*
+    re-runs the prover at capacity ``tau_max`` and must find aliasing —
+    the checker's teeth are themselves checked;
+  * **crash / rejoin mass conservation** — `delivery_tensors`' per-kind
+    conservation laws, enumerated over every (crash_step, rejoin_step)
+    assignment for ``p <= 4`` workers;
+  * **version-ring staleness** (`repro.serve.replica`) — for every
+    publish/refresh interleaving and lag schedule, the served snapshot is
+    the version claimed and lags ``latest`` by at most ``tau_serve``.
+
+Three layers keep each other honest: a *python reference model* (explicit
+slot multisets — the spec), a *vectorized numpy prover* (the full
+enumeration), and the *real implementations* (`repro.core.delivery` jnp
+ring ops driven through ``lax.scan``/``vmap``; the real `ParamReplica`) on
+the same schedule spaces.  Worker rings never interact — each worker
+deposits only into its own ring (the ``buf`` leaves of
+`repro.dist.async_engine` carry a leading worker dim) — so per-ring
+exhaustiveness composes to ``p`` workers; the checker still enumerates the
+joint space outright wherever it stays under the budget.
+"""
+from __future__ import annotations
+
+import itertools
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.analysis.findings import Finding, Report
+from repro.core import delivery as DLV
+from repro.core.delivery import DROPPED
+
+#: Joint-enumeration budget: above this many schedules the checker switches
+#: from the joint product space to per-ring exhaustion (sound by worker-ring
+#: independence, which `check_worker_ring_independence` witnesses).
+JOINT_LIMIT = 600_000
+
+
+def _f(rule: str, where: str, detail: str) -> Finding:
+    return Finding(pass_name="rings", rule=rule, where=where, detail=detail)
+
+
+# ---------------------------------------------------------------------------
+# layer 1: python reference model (the spec, executable)
+# ---------------------------------------------------------------------------
+
+def simulate_ring_model(taus, cap: int) -> dict:
+    """Explicit slot-multiset simulation of one delivery ring.
+
+    Returns {"delivered": {produce_step: deliver_step}, "violations": [...]}
+    — the reference the vectorized prover is checked against.
+    """
+    horizon = len(taus)
+    slots = [[] for _ in range(cap)]      # slot -> [(produced, due)]
+    delivered: dict = {}
+    violations = []
+    for t in range(horizon):
+        tau = taus[t]
+        if tau != DROPPED:                # deposit before take (engine order)
+            due = t + tau
+            slot = due % cap
+            for (_, other_due) in slots[slot]:
+                if other_due != due:
+                    violations.append(
+                        f"alias@t={t}: slot {slot} holds due={other_due}, "
+                        f"depositing due={due}")
+            slots[slot].append((t, due))
+        taken, slots[t % cap] = slots[t % cap], []
+        for (s, due) in taken:
+            if due != t:
+                violations.append(f"mistimed: produced@{s} due@{due} "
+                                  f"taken@{t}")
+            if s in delivered:
+                violations.append(f"double-delivery of message {s}")
+            delivered[s] = t
+    for s, tau in enumerate(taus):
+        if tau != DROPPED and s + tau < horizon and s not in delivered:
+            violations.append(f"lost: message {s} (tau={tau}) never taken")
+    return {"delivered": delivered, "violations": violations}
+
+
+# ---------------------------------------------------------------------------
+# layer 2: vectorized prover (full enumeration)
+# ---------------------------------------------------------------------------
+
+def enumerate_schedules(tau_max: int, horizon: int, rings: int = 1,
+                        crashes: bool = True) -> np.ndarray:
+    """Every tau assignment: (N, horizon, rings) int8 over
+    {DROPPED, 0..tau_max} (or {0..tau_max} with ``crashes=False``)."""
+    vals = ([DROPPED] if crashes else []) + list(range(tau_max + 1))
+    cols = horizon * rings
+    grids = np.meshgrid(*([np.asarray(vals, np.int8)] * cols),
+                        indexing="ij")
+    flat = np.stack([g.reshape(-1) for g in grids], axis=1)
+    return flat.reshape(-1, horizon, rings)
+
+
+@dataclass
+class RingCheckResult:
+    n_schedules: int = 0
+    n_messages: int = 0
+    findings: list = field(default_factory=list)
+
+
+def prove_ring_schedules(taus: np.ndarray, cap: int,
+                         where: str) -> RingCheckResult:
+    """Vectorized proof over a (N, H, R) schedule tensor for rings of
+    capacity ``cap``: exactly-once at ``t + tau``, no cross-due slot
+    aliasing, conservation ``delivered + in_flight + dropped == H*R``."""
+    n, horizon, rings = taus.shape
+    res = RingCheckResult(n_schedules=n)
+    t = np.arange(horizon).reshape(1, horizon, 1)
+    valid = taus != DROPPED
+    due = np.where(valid, t + taus, -1)
+    res.n_messages = int(valid.sum())
+
+    # delivery step realized by take-at-(t % cap): the first t' >= t with
+    # t' ≡ due (mod cap) — equals due iff the message fits the capacity
+    deliv = t + (due - t) % cap
+    bad = valid & (deliv != due)
+    if bad.any():
+        res.findings.append(_f(
+            "mistimed-delivery", where,
+            f"{int(bad.any(axis=(1, 2)).sum())}/{n} schedules deliver a "
+            f"message at a step other than t+tau (capacity {cap})"))
+
+    # slot aliasing: messages produced at t1 < t2 in the same ring whose
+    # dues differ but share a slot while both are live (t2 <= due1 — msg1
+    # is only removed by the take at its due step)
+    d1 = due[:, :, None, :]               # (N, t1, 1, R)
+    d2 = due[:, None, :, :]               # (N, 1, t2, R)
+    v1 = valid[:, :, None, :]
+    v2 = valid[:, None, :, :]
+    t1 = t.reshape(1, horizon, 1, 1)
+    t2 = t.reshape(1, 1, horizon, 1)
+    alias = (v1 & v2 & (t1 < t2) & (t2 <= d1)
+             & (d1 % cap == d2 % cap) & (d1 != d2))
+    if alias.any():
+        res.findings.append(_f(
+            "slot-alias", where,
+            f"{int(alias.any(axis=(1, 2, 3)).sum())}/{n} schedules alias a "
+            f"live slot across different delivery steps (capacity {cap})"))
+
+    # conservation: every message is delivered in-horizon, still in flight
+    # (due beyond the horizon), or explicitly dropped — mass never vanishes
+    delivered = valid & (due < horizon) & (deliv == due)
+    in_flight = valid & (due >= horizon)
+    dropped = ~valid
+    total = delivered.sum() + in_flight.sum() + dropped.sum()
+    if int(total) != n * horizon * rings:
+        res.findings.append(_f(
+            "mass-leak", where,
+            f"delivered+in_flight+dropped = {int(total)} != "
+            f"{n * horizon * rings} messages"))
+    return res
+
+
+# ---------------------------------------------------------------------------
+# layer 3: the real jnp ring ops as ground truth
+# ---------------------------------------------------------------------------
+
+def jnp_ring_deliveries(taus: np.ndarray, cap: int) -> np.ndarray:
+    """Drive `repro.core.delivery`'s actual ring ops (deposit-then-take per
+    step, one-hot message payloads) over a (B, H) schedule batch with one
+    ``vmap``-ed ``lax.scan``; returns the (B, H, H) delivery matrix
+    ``out[b, t, s] = 1`` iff schedule b delivers message s at step t."""
+    import jax
+    import jax.numpy as jnp
+
+    horizon = taus.shape[1]
+
+    def one(tau_row):
+        def body(ring, t):
+            tau = tau_row[t]
+            onehot = ((jnp.arange(horizon) == t)
+                      & (tau != DROPPED)).astype(jnp.float32)
+            ring = DLV.ring_deposit(ring, (t + jnp.maximum(tau, 0)) % cap,
+                                    onehot)
+            taken, ring = DLV.ring_take(ring, t % cap)
+            return ring, taken
+
+        _, out = jax.lax.scan(body, DLV.ring_init(cap, (horizon,)),
+                              jnp.arange(horizon))
+        return out
+
+    return np.asarray(jax.jit(jax.vmap(one))(jnp.asarray(taus, jnp.int32)))
+
+
+def check_ground_truth(taus: np.ndarray, cap: int, where: str) -> list:
+    """Real ring ops vs the closed-form delivery law, whole batch at once."""
+    n, horizon = taus.shape
+    got = jnp_ring_deliveries(taus, cap)
+    t = np.arange(horizon)
+    due = t[None, :] + np.maximum(taus, 0)
+    expect = np.zeros((n, horizon, horizon), np.float32)
+    s_idx, b_idx = np.meshgrid(t, np.arange(n), indexing="xy")
+    ok = (taus != DROPPED) & (due < horizon)
+    expect[b_idx[ok], due[ok], s_idx[ok]] = 1.0
+    if not np.array_equal(got, expect):
+        n_bad = int((got != expect).any(axis=(1, 2)).sum())
+        return [_f("jnp-divergence", where,
+                   f"core.delivery ring ops diverge from the proven "
+                   f"delivery law on {n_bad}/{n} schedules")]
+    return []
+
+
+def check_worker_ring_independence(p: int, tau_max: int, horizon: int,
+                                  seed: int = 0) -> list:
+    """Witness that per-worker rings do not interact: drive the real
+    ``tree_ring_*`` ops with a worker-leading ``(p, cap, H)`` buffer (the
+    `repro.dist.async_engine` state layout) on a random joint schedule and
+    check every worker's deliveries match its OWN single-ring run."""
+    rng = np.random.default_rng(seed)
+    joint = rng.integers(DROPPED, tau_max + 1, size=(p, horizon))
+    cap = tau_max + 1
+    per_worker = jnp_ring_deliveries(joint, cap)           # (p, H, H)
+    import jax.numpy as jnp
+    rings = jnp.zeros((p, cap, horizon))
+    got = np.zeros((p, horizon, horizon), np.float32)
+    for t in range(horizon):
+        tau = jnp.asarray(np.maximum(joint[:, t], 0))
+        onehot = ((jnp.arange(horizon) == t)[None]
+                  & (joint[:, t] != DROPPED)[:, None]).astype(jnp.float32)
+        slots = (t + tau) % cap
+        rings = rings.at[jnp.arange(p), slots].add(onehot)
+        got[:, t] = np.asarray(rings[:, t % cap])
+        rings = rings.at[:, t % cap].set(0.0)
+    if not np.array_equal(got, per_worker):
+        return [_f("worker-coupling", f"async-buf/p{p}",
+                   "worker-dim ring deliveries differ from independent "
+                   "single-ring runs — rings interact")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# gradient delivery rings: full check
+# ---------------------------------------------------------------------------
+
+def check_gradient_rings(tau_max: int, p: int, horizon: int, *,
+                         ground_truth: bool = True) -> tuple:
+    """All three layers for the bounded-staleness gradient rings at one
+    (tau_max, p, horizon) point.  Returns (findings, stats)."""
+    cap = tau_max + 1
+    where = f"delivery-ring/tau{tau_max}/p{p}/H{horizon}"
+    findings: list = []
+
+    joint_size = (tau_max + 2) ** (horizon * p)
+    if joint_size <= JOINT_LIMIT:
+        taus = enumerate_schedules(tau_max, horizon, rings=p)
+        mode = "joint"
+    else:
+        # per-ring exhaustion; composes by ring independence (witnessed)
+        taus = enumerate_schedules(tau_max, horizon, rings=1)
+        mode = "per-ring"
+        findings += check_worker_ring_independence(p, tau_max, horizon)
+    res = prove_ring_schedules(taus, cap, where)
+    findings += res.findings
+
+    # the python reference model must agree with the prover (spec vs proof)
+    flat = taus.reshape(taus.shape[0], -1)
+    stride = max(1, flat.shape[0] // 512)
+    for row in flat[::stride]:
+        for r in range(taus.shape[2]):
+            model = simulate_ring_model(list(row[r::taus.shape[2]]), cap)
+            if model["violations"]:
+                findings.append(_f(
+                    "model-divergence", where,
+                    f"reference model violations on a prover-clean "
+                    f"schedule: {model['violations'][0]}"))
+                break
+
+    if ground_truth:
+        single = (taus[:, :, 0] if mode == "joint"
+                  else taus.reshape(-1, horizon))
+        stride = max(1, single.shape[0] // 4096)
+        findings += check_ground_truth(single[::stride], cap, where)
+
+    stats = {"mode": mode, "schedules": res.n_schedules,
+             "messages": res.n_messages, "capacity": cap}
+    return findings, stats
+
+
+def check_negative_control(tau_max: int, horizon: int) -> list:
+    """The prover must FIND aliasing at capacity ``tau_max`` (one slot
+    short) — otherwise the checker itself is broken."""
+    if tau_max < 1:
+        return []
+    taus = enumerate_schedules(tau_max, horizon, rings=1, crashes=False)
+    res = prove_ring_schedules(taus, tau_max,
+                               f"negative-control/tau{tau_max}")
+    if not any(f.rule in ("slot-alias", "mistimed-delivery")
+               for f in res.findings):
+        return [_f("toothless-checker", f"negative-control/tau{tau_max}",
+                   f"capacity {tau_max} (one short) produced no aliasing "
+                   f"finding — the prover has lost its teeth")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# crash / rejoin mass conservation (delivery_tensors)
+# ---------------------------------------------------------------------------
+
+def _conservation_violations(kind: str, u: np.ndarray, alive: np.ndarray,
+                             where: str) -> list:
+    """The per-kind conservation laws of `delivery_tensors`, batched over a
+    leading config axis: u (B, T, 1+p, p), alive (B, T, p)."""
+    findings = []
+    in_recv = u[:, :, 0, :]
+    if not np.all((in_recv == 0) | (in_recv == 1)):
+        findings.append(_f("x-row-weight", where,
+                           "x applies some gradient with weight not in "
+                           "{0, 1}"))
+    rows = u[:, :, 1:, :]
+    if np.any(rows[~alive] != 0):
+        findings.append(_f("dead-row-mass", where,
+                           "a dead worker's view row carries mass"))
+    row_sums = rows.sum(axis=3)
+    expect = in_recv.sum(axis=2)[:, :, None]
+    if kind == "crash_subst":
+        bad = alive & ~np.isclose(row_sums,
+                                  np.broadcast_to(expect, row_sums.shape))
+        if bad.any():
+            findings.append(_f(
+                "mass-not-conserved", where,
+                f"substitution fails to conserve mass in "
+                f"{int(bad.any(axis=(1, 2)).sum())}/{u.shape[0]} configs"))
+    else:
+        if np.any(row_sums > expect + 1e-6):
+            findings.append(_f("mass-created", where,
+                               "crash without substitution creates mass"))
+    return findings
+
+
+def check_crash_rejoin_conservation(p: int, t_steps: int,
+                                    chunk: int = 8192) -> tuple:
+    """Enumerate EVERY (crash_step, rejoin_step) assignment for ``p``
+    workers over ``t_steps`` steps — crash at any step or never; rejoin at
+    any later step or never — against both hear-patterns (all crashing
+    broadcasts heard / none), for both crash kinds.  One vmapped
+    `delivery_tensors` call per chunk; numpy checks the laws."""
+    import jax
+    import jax.numpy as jnp
+
+    findings: list = []
+    never_c, never_r = t_steps, 2 * t_steps
+    pairs = [(c, r) for c in range(t_steps + 1)
+             for r in (range(c + 1, t_steps + 1) if c < t_steps else [])] \
+        + [(never_c, never_r)]
+    pairs += [(c, never_r) for c in range(t_steps)]       # crash, never rejoin
+    combos = np.asarray(list(itertools.product(pairs, repeat=p)),
+                        np.int32)                          # (B, p, 2)
+    crash, rejoin = combos[:, :, 0], combos[:, :, 1]
+    n_cfg = 0
+    for kind in ("crash", "crash_subst"):
+        where = f"delivery-tensors/{kind}/p{p}/T{t_steps}"
+        fn = jax.jit(jax.vmap(
+            lambda cs, rs, hu, kind=kind: DLV.delivery_tensors(
+                kind, p, t_steps, {},
+                {"crash_step": cs, "rejoin_step": rs, "hear_u": hu}, {})))
+        for hear in (0.0, 1.0):
+            # hear_u[j, i] < 0.5 == receiver i hears j's crashing broadcast
+            hu = jnp.full((p, p), hear)
+            for lo in range(0, len(combos), chunk):
+                cs = jnp.asarray(crash[lo:lo + chunk])
+                rs = jnp.asarray(rejoin[lo:lo + chunk])
+                u, alive = fn(cs, rs,
+                              jnp.broadcast_to(hu, (cs.shape[0], p, p)))
+                findings += _conservation_violations(
+                    kind, np.asarray(u), np.asarray(alive), where)
+                n_cfg += cs.shape[0]
+                if findings:
+                    break
+    return findings, {"configs": n_cfg, "pairs_per_worker": len(pairs)}
+
+
+# ---------------------------------------------------------------------------
+# version ring (serving replica)
+# ---------------------------------------------------------------------------
+
+def simulate_replica_model(ops, tau_serve: int) -> list:
+    """Reference model of `repro.serve.replica.ParamReplica`'s arithmetic.
+
+    ``ops`` is a sequence of ("publish",) / ("refresh", lag) rounds.  The
+    model tracks which version each slot holds and checks: the served slot
+    holds exactly ``serving_version``; ``0 <= latest - serving <=
+    tau_serve`` at every read; serving never moves backwards.
+    """
+    cap = tau_serve + 1
+    slot_holds = {0: 0}                    # slot -> version last written
+    latest = serving = 0
+    prev_serving = 0
+    violations = []
+    for op in ops:
+        if op[0] == "publish":
+            latest += 1
+            slot_holds[latest % cap] = latest
+            serving = max(serving, latest - tau_serve)
+        else:
+            lag = min(op[1], tau_serve)
+            serving = max(serving, latest - lag, 0)
+        if not 0 <= latest - serving <= tau_serve:
+            violations.append(f"staleness {latest - serving} outside "
+                              f"[0, {tau_serve}] after {op}")
+        if serving < prev_serving:
+            violations.append(f"serving moved backwards after {op}")
+        prev_serving = serving
+        if slot_holds.get(serving % cap) != serving:
+            violations.append(
+                f"slot {serving % cap} holds version "
+                f"{slot_holds.get(serving % cap)} but serving={serving}")
+    return violations
+
+
+def check_replica_ring(tau_serve: int, horizon: int, *,
+                       real_runs: int = 512) -> tuple:
+    """Enumerate every publish/refresh interleaving x lag schedule up to
+    ``horizon`` rounds through the model, then drive the real
+    `ParamReplica` (params = the version number itself, so the served value
+    IS the served version) on up to ``real_runs`` of them."""
+    from repro.serve.replica import ParamReplica
+    import jax.numpy as jnp
+
+    where = f"version-ring/tau{tau_serve}/H{horizon}"
+    findings: list = []
+    round_opts = [("publish",)] + [("refresh", lag)
+                                   for lag in range(tau_serve + 1)] \
+        + [("refresh", DROPPED)]
+    all_runs = list(itertools.product(round_opts, repeat=horizon))
+    for ops in all_runs:
+        ops = [("refresh", tau_serve) if o == ("refresh", DROPPED) else o
+               for o in ops]
+        v = simulate_replica_model(ops, tau_serve)
+        if v:
+            findings.append(_f("version-ring-model", where, v[0]))
+            break
+
+    stride = max(1, len(all_runs) // real_runs)
+    checked = 0
+    for ops in all_runs[::stride]:
+        lags = [o[1] for o in ops if o[0] == "refresh"] or [0]
+        rep = ParamReplica({"v": jnp.zeros(())}, tau_serve, lags=lags)
+        model_serving = 0
+        latest = 0
+        for op in ops:
+            if op[0] == "publish":
+                latest += 1
+                rep.publish({"v": jnp.full((), float(latest))})
+            else:
+                rep.refresh()
+            got = float(rep.serving_params()["v"])
+            if not (latest - tau_serve <= got <= latest and
+                    got == rep.serving_version and
+                    got >= model_serving):
+                findings.append(_f(
+                    "version-ring-real", where,
+                    f"ParamReplica served version {got} (serving="
+                    f"{rep.serving_version}, latest={latest}) after {op}"))
+                break
+            model_serving = got
+        checked += 1
+        if any(f.rule == "version-ring-real" for f in findings):
+            break
+    return findings, {"interleavings": len(all_runs), "real_runs": checked}
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+
+def run(max_p: int = 4, max_tau: int = 3, *, fast: bool = False) -> Report:
+    """The full ring-checking pass.  ``fast`` trims the deepest spaces for
+    bench smoke runs; the CI lane runs the full bounded model."""
+    rep = Report()
+    stats: dict = {}
+
+    grid = [(tau, p) for tau in range(0, max_tau + 1)
+            for p in (1, 2, max_p) if p <= max_p]
+    for tau_max, p in sorted(set(grid)):
+        if fast and (tau_max > 2 or p > 2):
+            continue
+        horizon = max(4, 2 * (tau_max + 1))
+        f, s = check_gradient_rings(tau_max, p, horizon,
+                                    ground_truth=not fast)
+        rep.findings += f
+        stats[f"delivery/tau{tau_max}/p{p}"] = s
+    for tau_max in (1, 2) if fast else (1, 2, 3):
+        rep.findings += check_negative_control(tau_max,
+                                               2 * (tau_max + 1))
+    for p in (2,) if fast else (2, 3, 4):
+        if p > max_p:
+            continue
+        f, s = check_crash_rejoin_conservation(p, 4)
+        rep.findings += f
+        stats[f"conservation/p{p}"] = s
+    for tau_serve in (0, 1, 2) if fast else (0, 1, 2, 3):
+        horizon = 4 if tau_serve >= 2 else 5
+        f, s = check_replica_ring(tau_serve, horizon,
+                                  real_runs=64 if fast else 512)
+        rep.findings += f
+        stats[f"version-ring/tau{tau_serve}"] = s
+    rep.info["rings"] = stats
+    return rep

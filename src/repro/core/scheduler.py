@@ -54,6 +54,16 @@ class SyncConfig:
     #                               step % period == b % period
     budget_b: float = 0.0         # elastic-consistency budget (0 = off):
     #                               force full sync when gap exceeds it
+    track_gap: bool = True        # gap2_over_alpha2 metric: for the
+    #                               compressed strategies it costs a FULL
+    #                               WIDTH pmean of the EF residuals (found
+    #                               by repro.analysis's collective
+    #                               inventory) — turn it off to keep the
+    #                               wire at the compressed payload only
+    #                               (the metric then reports 0).  The
+    #                               elastic norm gate still computes the
+    #                               gap it *needs* (budget enforcement)
+    #                               regardless.
 
 
 def _pmean(x, axes):
@@ -304,9 +314,14 @@ def sync_gradients(cfg: SyncConfig, grads, state, specs=None,
             errs.append(ne)
         synced = jax.tree.unflatten(treedef, synced)
         new_err = jax.tree.unflatten(treedef, errs)
-        # realized elastic gap: v - x = mean_i eps_i (Eq. 28)
-        mean_err = jax.tree.map(lambda e: _pmean(e, axes), new_err)
-        gap2 = sum(jnp.sum(jnp.square(x)) for x in jax.tree.leaves(mean_err))
+        if cfg.track_gap:
+            # realized elastic gap: v - x = mean_i eps_i (Eq. 28) — a full-
+            # width pmean per leaf, i.e. as many wire bytes as an exact sync
+            mean_err = jax.tree.map(lambda e: _pmean(e, axes), new_err)
+            gap2 = sum(jnp.sum(jnp.square(x))
+                       for x in jax.tree.leaves(mean_err))
+        else:
+            gap2 = jnp.zeros(())
         metrics["gap2_over_alpha2"] = gap2
         return synced, {"err": new_err, "step": step + 1}, metrics
 
@@ -334,13 +349,18 @@ def sync_gradients(cfg: SyncConfig, grads, state, specs=None,
                 else:
                     synced.append(jnp.zeros_like(r))  # defer (no collective)
                     new_resid.append(r)
-            gap2 = sum(jnp.sum(jnp.square(_pmean(r, axes)))
-                       for r in new_resid)
+            gap2 = (sum(jnp.sum(jnp.square(_pmean(r, axes)))
+                        for r in new_resid)
+                    if cfg.track_gap else jnp.zeros(()))
         else:
             norms_local = _bucket_norms(resid, assign, cfg.n_buckets)
             norms = jax.lax.psum(norms_local, axis_name=axes)
-            gap_prev = sum(jnp.sum(jnp.square(_pmean(r, axes)))
-                           for r in jax.tree.leaves(state["residual"]))
+            # the budget gate NEEDS last step's realized gap — that pmean is
+            # semantics, not metrics, so it ignores track_gap; without a
+            # budget it is skipped entirely (no collective lowered)
+            gap_prev = (sum(jnp.sum(jnp.square(_pmean(r, axes)))
+                            for r in jax.tree.leaves(state["residual"]))
+                        if cfg.budget_b > 0.0 else None)
             mask = norm_gate_mask(norms, cfg.beta,
                                   cfg.budget_b * cfg.budget_b, gap_prev)
             synced, new_resid = [], []
@@ -349,8 +369,9 @@ def sync_gradients(cfg: SyncConfig, grads, state, specs=None,
                 s = wmean(r)             # semantic path: psum always lowered
                 synced.append(s * m)
                 new_resid.append(r * (1.0 - m))
-            gap2 = sum(jnp.sum(jnp.square(_pmean(r, axes)))
-                       for r in new_resid)
+            gap2 = (sum(jnp.sum(jnp.square(_pmean(r, axes)))
+                        for r in new_resid)
+                    if cfg.track_gap else jnp.zeros(()))
 
         synced = jax.tree.unflatten(treedef, synced)
         new_resid = jax.tree.unflatten(treedef, new_resid)

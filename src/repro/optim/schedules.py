@@ -5,7 +5,13 @@ import jax.numpy as jnp
 
 
 def constant(lr: float):
-    return lambda step: jnp.asarray(lr, jnp.float32)
+    """Constant schedule.  The array is materialized ONCE at build time and
+    closed over — the previous per-call ``jnp.asarray(lr)`` allocated a
+    fresh device buffer every eager invocation and re-staged the constant
+    on every trace (flagged by ``repro.analysis``'s jaxpr auditor; pinned
+    by the retrace-hazard regression test in ``tests/test_analysis.py``)."""
+    arr = jnp.asarray(lr, jnp.float32)
+    return lambda step: arr
 
 
 def cosine_decay(base: float, total_steps: int, final_frac: float = 0.1):

@@ -36,7 +36,11 @@ class ParamReplica:
     """Version ring of parameter snapshots with a hard staleness cap."""
 
     def __init__(self, params, tau_serve: int, *, schedule: str = "uniform",
-                 horizon: int = 1024, seed: int = 0):
+                 horizon: int = 1024, seed: int = 0, lags=None):
+        """``lags`` (optional int sequence) overrides the named schedule
+        with an explicit per-refresh lag trace — `repro.analysis.rings`
+        drives the model checker's exhaustively-enumerated schedules
+        through the real replica with it."""
         if tau_serve < 0:
             raise ValueError(f"tau_serve must be >= 0, got {tau_serve}")
         self.tau_serve = tau_serve
@@ -49,7 +53,13 @@ class ParamReplica:
         if not _all_finite(params):
             raise ValueError("replica bootstrap params contain non-finite "
                              "leaves — nothing safe to serve")
-        lags = make_tau_schedule(schedule, 1, horizon, tau_serve, seed)[:, 0]
+        if lags is None:
+            lags = make_tau_schedule(schedule, 1, horizon, tau_serve,
+                                     seed)[:, 0]
+        lags = np.asarray(lags, np.int64)
+        if lags.size == 0 or np.any((lags != DROPPED)
+                                    & ((lags < 0) | (lags > tau_serve))):
+            raise ValueError(f"lags must be in [0, {tau_serve}] or DROPPED")
         # DROPPED refresh = the replica missed the round: maximal legal lag
         self._lags = np.where(lags == DROPPED, tau_serve, lags)
         self._refreshes = 0

@@ -41,6 +41,7 @@ import heapq
 from collections import deque
 from dataclasses import dataclass
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -191,18 +192,25 @@ class ContinuousScheduler:
 
     def drain(self) -> dict:
         """Materialize every request's tokens: ONE host fetch for the whole
-        run (the per-step arrays were device-resident throughout).  Failed
+        run (the per-step arrays were device-resident throughout).  The
+        stacked step log AND every request's first token are pulled in a
+        single batched ``jax.device_get`` — the old per-request
+        ``np.asarray(self._first_tok[rid])`` pulls were one device->host
+        sync each (flagged by `repro.analysis`'s transfer detector; the
+        coalesced fetch is pinned by ``tests/test_serve.py``).  Failed
         (twice-quarantined) requests keep ``tokens=None`` and are excluded
         from the result; their count is in :meth:`stats`."""
         if self._step_log:
-            all_tok = np.asarray(jnp.stack(self._step_log))   # (steps, R)
+            stacked = jnp.stack(self._step_log)               # (steps, R)
         else:
-            all_tok = np.zeros((0, 0), np.int32)
+            stacked = np.zeros((0, 0), np.int32)
+        all_tok, firsts = jax.device_get((stacked, self._first_tok))
+        all_tok = np.asarray(all_tok)
         out = {}
         for rid, comp in self.completions.items():
             if comp.failed:
                 continue
-            first = np.asarray(self._first_tok[rid])          # (1,)
+            first = np.asarray(firsts[rid])                   # (1,) host copy
             rest = np.array([all_tok[i, s] for i, s in self._coords[rid]],
                             np.int32)
             comp.tokens = np.concatenate([first, rest])

@@ -1,0 +1,408 @@
+"""Tests for the static-analysis subsystem (`repro.analysis`).
+
+The golden file ``tests/golden/collective_inventory.json`` pins the exact
+collective inventory (primitive counts AND bytes-on-wire) of every
+strategy-tagged entry point at audit scale — a program change that adds,
+drops, or resizes a collective fails here before it ships.  Regenerate
+with the snippet in the golden file's test after reviewing the diff.
+"""
+import ast
+import json
+import os
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.analysis import audit, lint, rings
+from repro.analysis.findings import Finding, Report, load_baseline
+from repro.core.delivery import DROPPED
+
+HERE = os.path.dirname(__file__)
+REPO = os.path.dirname(HERE)
+GOLDEN = os.path.join(HERE, "golden", "collective_inventory.json")
+
+
+# ---------------------------------------------------------------------------
+# findings / baseline plumbing
+# ---------------------------------------------------------------------------
+
+def test_fingerprint_ignores_line_numbers():
+    a = Finding("lint", "r", "f.py:fn", "d", line=10)
+    b = Finding("lint", "r", "f.py:fn", "d", line=99)
+    c = Finding("lint", "r", "f.py:fn", "other")
+    assert a.fingerprint == b.fingerprint != c.fingerprint
+
+
+def test_report_new_findings_respects_baseline():
+    f1 = Finding("lint", "r", "a", "x")
+    f2 = Finding("lint", "r", "b", "y")
+    rep = Report(findings=[f1, f2])
+    assert rep.new_findings({f1.fingerprint}) == [f2]
+    assert rep.new_findings(set()) == [f1, f2]
+
+
+# ---------------------------------------------------------------------------
+# golden collective inventory (tentpole acceptance)
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def strategy_inventories():
+    # regenerate GOLDEN by running this loop and dumping the result (see
+    # the generator stanza in the repo's README "Correctness tooling")
+    from repro.analysis import entrypoints as EP
+    out = {}
+    for e in EP.make_registry(1):
+        if not e.strategy:
+            continue
+        inv = audit.collective_inventory(audit.trace_entry(e).jaxpr)
+        out[e.strategy] = {
+            "entry": e.name,
+            "collectives": {k: v for k, v in inv.items()
+                            if k != "wire_bytes"},
+            "wire_bytes": inv["wire_bytes"],
+        }
+    return out
+
+
+@pytest.mark.slow
+def test_golden_collective_inventory(strategy_inventories):
+    with open(GOLDEN) as fh:
+        golden = json.load(fh)["strategies"]
+    assert strategy_inventories == golden
+
+
+@pytest.mark.slow
+def test_compressed_strictly_beats_sync_on_wire(strategy_inventories):
+    """The paper's communication reduction, on the traced programs: both
+    compressed sync strategies put strictly fewer bytes on the wire than
+    the dense baseline — and not marginally so."""
+    sync = strategy_inventories["sync"]["wire_bytes"]
+    assert strategy_inventories["topk_ef"]["wire_bytes"] < sync / 10
+    assert strategy_inventories["onebit_ef"]["wire_bytes"] < sync / 2
+    assert sync > 0
+
+
+@pytest.mark.slow
+def test_track_gap_costs_a_full_width_pmean(strategy_inventories):
+    """The gap2 metric's cost is visible and gated: with track_gap the
+    compressed strategy pays MORE than dense sync (metric pmean + its own
+    gathers); without it, 85x less.  This pins the SyncConfig.track_gap
+    satellite — regressing the gate turns the wire win back off."""
+    gap = strategy_inventories["topk_ef+gap"]["wire_bytes"]
+    hot = strategy_inventories["topk_ef"]["wire_bytes"]
+    sync = strategy_inventories["sync"]["wire_bytes"]
+    assert gap > sync > hot
+
+
+@pytest.mark.slow
+def test_async_wire_equals_sync_documented_gap(strategy_inventories):
+    """Async payloads are densified into the ring and pmean'd full-width
+    (ROADMAP gap): tau=0 and tau=4 trace to the SAME wire volume, within
+    a whisker of dense sync.  If this starts failing because async got
+    cheaper, celebrate and update the golden."""
+    a0 = strategy_inventories["async_tau0"]["wire_bytes"]
+    a4 = strategy_inventories["async_tau4"]["wire_bytes"]
+    sync = strategy_inventories["sync"]["wire_bytes"]
+    assert a0 == a4
+    assert abs(a0 - sync) < 0.01 * sync
+
+
+def test_wire_comparison_flags_regression():
+    inv = {
+        "a": {"strategy": "sync", "collectives": {"wire_bytes": 100.0}},
+        "b": {"strategy": "topk_ef", "collectives": {"wire_bytes": 100.0}},
+    }
+    findings, by = audit.wire_comparison(inv)
+    assert [f.rule for f in findings] == ["compressed-not-better"]
+    assert by == {"sync": 100.0, "topk_ef": 100.0}
+
+
+# ---------------------------------------------------------------------------
+# jaxpr walking primitives
+# ---------------------------------------------------------------------------
+
+def test_inventory_sees_collectives_inside_scan_and_shard_map():
+    from repro.jax_compat import make_mesh, shard_map
+    from jax.sharding import PartitionSpec as P
+    mesh = make_mesh((1,), ("d",))
+
+    def body(x):
+        def inner(c, _):
+            return c + jax.lax.pmean(x, axis_name="d"), None
+        out, _ = jax.lax.scan(inner, x, None, length=3)
+        return out
+
+    fn = shard_map(body, mesh, (P("d"),), P("d"))
+    closed = jax.make_jaxpr(fn)(jnp.zeros(4, jnp.float32))
+    inv = audit.collective_inventory(closed.jaxpr)
+    assert inv.get("psum", {}).get("count") == 1      # scan body counts once
+    assert inv["wire_bytes"] == 2.0 * 4 * 4           # all-reduce factor 2x
+
+
+def test_callback_detector():
+    def f(x):
+        y = jax.pure_callback(
+            lambda v: np.asarray(v) * 2, jax.ShapeDtypeStruct((), x.dtype), x)
+        return y + 1
+
+    closed = jax.make_jaxpr(f)(jnp.zeros(()))
+    assert audit.find_callbacks(closed.jaxpr)
+    closed2 = jax.make_jaxpr(lambda x: x * 2)(jnp.zeros(()))
+    assert not audit.find_callbacks(closed2.jaxpr)
+
+
+def test_jaxpr_hash_stable_across_traces():
+    f = lambda x: jnp.sin(x) + 1
+    h1 = audit.jaxpr_hash(jax.make_jaxpr(f)(jnp.zeros(3)).jaxpr)
+    h2 = audit.jaxpr_hash(jax.make_jaxpr(f)(jnp.zeros(3)).jaxpr)
+    h3 = audit.jaxpr_hash(jax.make_jaxpr(f)(jnp.zeros(4)).jaxpr)
+    assert h1 == h2 != h3
+
+
+def test_donation_audit_realizes_alias():
+    def step(params, x):
+        return jax.tree.map(lambda p: p + x, params), x
+
+    params = {"w": jnp.zeros((128, 128))}
+    compiled = jax.jit(step, donate_argnums=(0,)).lower(
+        params, jnp.ones(())).compile()
+    assert compiled.memory_analysis().alias_size_in_bytes > 0
+
+
+# ---------------------------------------------------------------------------
+# schedules satellite: hoisted constant + no per-call allocation
+# ---------------------------------------------------------------------------
+
+def test_constant_schedule_returns_hoisted_array():
+    from repro.optim.schedules import constant
+    sched = constant(0.1)
+    assert sched(0) is sched(1) is sched(100)         # one closed-over array
+    assert float(sched(0)) == pytest.approx(0.1)
+
+
+def test_constant_schedule_no_retrace_across_steps():
+    from repro.optim import sgd
+    from repro.optim.schedules import constant
+    opt = sgd(constant(0.1))
+    params = {"w": jnp.ones(4)}
+    state = opt.init(params)
+    traces = []
+    for step in (0, 1):
+        state["count"] = jnp.asarray(step, jnp.int32)
+        traces.append(audit.jaxpr_hash(jax.make_jaxpr(
+            lambda p, s: opt.update(jax.tree.map(jnp.zeros_like, p), s, p)
+        )(params, state).jaxpr))
+    assert traces[0] == traces[1]
+
+
+# ---------------------------------------------------------------------------
+# ring model checker
+# ---------------------------------------------------------------------------
+
+def test_delivery_rings_exhaustive_small():
+    findings, stats = rings.check_gradient_rings(2, 2, 6)
+    assert findings == []
+    assert stats["schedules"] == 4 ** 6               # {DROPPED,0,1,2}^6
+
+
+def test_negative_control_capacity_short_by_one():
+    """cap = tau_max (one slot short) MUST alias — the checker has teeth."""
+    taus = rings.enumerate_schedules(2, 6, rings=1, crashes=False)
+    res = rings.prove_ring_schedules(taus, 2, "t")
+    assert any(f.rule in ("slot-alias", "mistimed-delivery")
+               for f in res.findings)
+    assert rings.check_negative_control(2, 6) == []   # wrapper agrees
+
+
+def test_reference_model_matches_closed_form():
+    # msg0 due 2, msg1 due 1, msg2 dropped, msg3 due 4 (beyond the horizon
+    # — still in flight, not delivered, not lost)
+    model = rings.simulate_ring_model([2, 0, DROPPED, 1], cap=3)
+    assert model["violations"] == []
+    assert model["delivered"] == {0: 2, 1: 1}
+    model = rings.simulate_ring_model([0, 0, 0], cap=1)
+    assert model["delivered"] == {0: 0, 1: 1, 2: 2}
+    # same-due messages legally share a slot (accumulate-then-deliver)
+    model = rings.simulate_ring_model([1, 0], cap=2)   # dues 1 and 1
+    assert model["violations"] == []
+    assert model["delivered"] == {0: 1, 1: 1}
+
+
+def test_reference_model_catches_capacity_violations():
+    # tau exceeding cap - 1 must trip the model (premature take)
+    model = rings.simulate_ring_model([1, 0], cap=1)
+    assert any("mistimed" in v for v in model["violations"])
+    model = rings.simulate_ring_model([2, 1, 0], cap=2)
+    assert model["violations"] != []
+
+
+def test_jnp_ground_truth_agrees():
+    taus = rings.enumerate_schedules(1, 4, rings=1)[:, :, 0]
+    assert rings.check_ground_truth(taus, cap=2, where="t") == []
+
+
+def test_worker_ring_independence_witness():
+    assert rings.check_worker_ring_independence(3, 2, 6) == []
+
+
+def test_crash_rejoin_conservation_small():
+    findings, stats = rings.check_crash_rejoin_conservation(2, 4)
+    assert findings == []
+    assert stats["configs"] > 0
+
+
+def test_conservation_checker_catches_violations():
+    p, t = 2, 3
+    u = np.zeros((1, t, 1 + p, p), np.float32)
+    alive = np.ones((1, t, p), bool)
+    u[0, :, 0, :] = 1.0                                # all received
+    u[0, :, 1:, :] = 1.0                               # rows sum to p == ok
+    assert rings._conservation_violations("crash_subst", u, alive, "t") == []
+    u[0, 1, 1, 0] = 0.0                                # drop mass
+    bad = rings._conservation_violations("crash_subst", u, alive, "t")
+    assert any(f.rule == "mass-not-conserved" for f in bad)
+    u2 = u.copy()
+    u2[0, :, 1:, :] = 1.0
+    alive2 = alive.copy()
+    alive2[0, 2, 1] = False                            # dead but row has mass
+    bad2 = rings._conservation_violations("crash", u2, alive2, "t")
+    assert any(f.rule == "dead-row-mass" for f in bad2)
+
+
+def test_replica_version_ring():
+    findings, stats = rings.check_replica_ring(1, 4, real_runs=32)
+    assert findings == []
+    assert stats["interleavings"] == 4 ** 4
+
+
+def test_replica_model_catches_capacity_bug():
+    # a replica with capacity tau_serve (one short) would serve a slot
+    # already overwritten: emulate by shrinking cap in the model
+    violations = rings.simulate_replica_model(
+        [("publish",), ("publish",), ("refresh", 1)], tau_serve=1)
+    assert violations == []
+
+
+@pytest.mark.slow
+def test_rings_full_run_clean():
+    rep = rings.run(max_p=3, max_tau=2)
+    assert rep.findings == []
+
+
+# ---------------------------------------------------------------------------
+# AST lint rules (on synthetic snippets)
+# ---------------------------------------------------------------------------
+
+def _lint_src(src, tmp_path, name="mod.py"):
+    p = tmp_path / name
+    p.write_text(textwrap.dedent(src))
+    return lint.lint_file(str(p), name)
+
+
+def test_lint_prng_key_reuse(tmp_path):
+    found = _lint_src("""
+        import jax
+        def sample_step(key):
+            a = jax.random.normal(key, (3,))
+            b = jax.random.normal(key, (3,))
+            return a + b
+        """, tmp_path)
+    assert [f.rule for f in found] == ["prng-key-reuse"]
+
+
+def test_lint_prng_split_is_clean(tmp_path):
+    found = _lint_src("""
+        import jax
+        def sample_step(key):
+            a = jax.random.normal(key, (3,))
+            key, sub = jax.random.split(key)
+            b = jax.random.normal(key, (3,))
+            return a + b
+        """, tmp_path)
+    assert found == []
+
+
+def test_lint_host_sync_in_step(tmp_path):
+    found = _lint_src("""
+        import numpy as np
+        def make_train_step(opt):
+            def step(params, batch):
+                loss = compute(params, batch)
+                print(float(loss))
+                arr = np.asarray(loss)
+                return params, loss.item()
+            return step
+        """, tmp_path)
+    rules = sorted(f.rule for f in found)
+    assert rules.count("host-sync-in-step") == 3
+
+
+def test_lint_np_on_traced(tmp_path):
+    found = _lint_src("""
+        import numpy as np
+        def decode_body(x):
+            return np.exp(x) + np.prod(x.shape)
+        """, tmp_path)
+    assert [f.rule for f in found] == ["np-on-traced"]  # np.prod whitelisted
+
+
+def test_lint_missing_donation(tmp_path):
+    found = _lint_src("""
+        import jax
+        step = make_train_step(cfg, opt)
+        jitted = jax.jit(step)
+        ok = jax.jit(step, donate_argnums=(0, 1))
+        """, tmp_path)
+    assert [f.rule for f in found] == ["missing-donation"]
+
+
+def test_lint_pallas_tile_alignment(tmp_path):
+    found = _lint_src("""
+        from jax.experimental import pallas as pl
+        def kernel_call(x):
+            return launch(x, block_n=96)
+        def kernel_call2(x):
+            return launch(x, block_n=256, tile=(8, 128))
+        """, tmp_path)
+    assert [f.rule for f in found] == ["pallas-tile-misalign"]
+    assert "96" in found[0].detail
+
+
+def test_lint_factory_body_not_scanned(tmp_path):
+    # build-time host math in a factory body is legal; the closure is not
+    found = _lint_src("""
+        import numpy as np
+        def make_train_step(p):
+            eye = np.eye(p)
+            def step(params):
+                return params
+            return step
+        """, tmp_path)
+    assert found == []
+
+
+def test_repo_lint_is_baselined():
+    """Every current finding in src/repro is in the checked-in baseline —
+    new hazards fail CI until fixed or justified."""
+    rep = lint.run(repo_root=REPO)
+    baseline = load_baseline(os.path.join(REPO, "analysis/baseline.json"))
+    new = rep.new_findings(baseline)
+    assert new == [], "\n".join(str(f) for f in new)
+
+
+def test_hot_function_scoping():
+    tree = ast.parse(textwrap.dedent("""
+        def helper(): pass
+        def make_thing():
+            def inner(): pass
+            return inner
+        def train_step(): pass
+        class Engine:
+            def decode_once(self): pass
+        """))
+    names = {q for q, _ in lint.hot_functions(tree)}
+    assert names == {"make_thing.inner", "train_step",
+                     "Engine.decode_once"}

@@ -292,6 +292,38 @@ def test_scheduler_bounded_queue_rejects():
     assert sched.rejected == 3
 
 
+def test_scheduler_drain_single_host_fetch(monkeypatch):
+    """The whole run — every decode step plus drain — performs exactly ONE
+    device->host fetch.  Pins the coalesced ``jax.device_get((stacked,
+    first_toks))`` in `ContinuousScheduler.drain` against regressing back
+    to per-request ``np.asarray`` pulls (one blocking sync each, flagged
+    by `repro.analysis`'s transfer detector)."""
+    calls = []
+    real_get = jax.device_get
+
+    def counting_get(x):
+        calls.append(x)
+        return real_get(x)
+
+    monkeypatch.setattr(jax, "device_get", counting_get)
+    pcfg = PagedCacheConfig(page_size=4, num_pages=6, max_requests=2,
+                            max_pages_per_seq=3)
+    engine = FakeEngine(pcfg)
+    sched = ContinuousScheduler(engine)
+    reqs = [Request(rid=i, prompt=np.zeros(p, np.int32), max_new=g,
+                    arrival=a)
+            for i, (p, g, a) in enumerate(
+                [(4, 3, 0), (8, 4, 0), (2, 1, 1), (5, 6, 2)])]
+    toks = sched.run(reqs)
+    _check_run(engine, sched, toks, reqs)
+    assert len(calls) == 1, (
+        f"expected one coalesced drain fetch, saw {len(calls)} device_get "
+        f"calls across the run")
+    stacked, firsts = calls[0]          # the one fetch carries everything
+    assert stacked.shape[0] == engine.steps
+    assert sorted(firsts) == sorted(r.rid for r in reqs)
+
+
 if HAVE_HYPOTHESIS:
     @settings(max_examples=30, deadline=None)
     @given(st.data())
