@@ -69,17 +69,28 @@ def _child() -> None:
 
     batches = [shard_batch(data.batch(t)) for t in range(STEPS)]
 
-    def train(step_fn, state):
+    def train(step_fn, mkstate):
         params, opt_state = params0, opt.init(params0)
-        # one discarded step so the steps/s rows time the steady state,
-        # not the two programs' (different) compile times
-        jax.block_until_ready(step_fn(params, opt_state, state, batches[0]))
+        # two discarded warmup steps so the steps/s rows time the
+        # overlapped steady state: the first pays compile, the second runs
+        # the compiled program with PRIMED delivery buffers (the overlap
+        # engine's first post-compile step still touches all-zero payload
+        # rings; the second is the shape every later step has).  The timed
+        # loop then restarts from fresh state so the loss trajectory is
+        # unpolluted — per-step cost does not depend on ring contents.
+        # (The delivery state is donated — a training loop reassigns it
+        # every step — so the restart also replaces the consumed buffers.)
+        wp, wo, ws, _ = step_fn(params, opt_state, mkstate(), batches[0])
+        jax.block_until_ready(step_fn(wp, wo, ws, batches[1 % STEPS]))
+        del wp, wo, ws
+        state = mkstate()
         losses = []
         t0 = time.perf_counter()
         for b in batches:
             params, opt_state, state, metrics = step_fn(
                 params, opt_state, state, b)
             losses.append(float(metrics["loss"]))
+        jax.block_until_ready(params)
         dt = time.perf_counter() - t0
         return losses, float(np.mean(losses[-min(10, STEPS):])), dt
 
@@ -90,23 +101,31 @@ def _child() -> None:
     # reference: identical program structure, delay rings removed)
     scfg = SyncConfig(strategy="exact", axis_names=("data",))
     estep = jax.jit(make_elastic_train_step(cfg, opt, mesh, scfg, pspecs,
-                                            flags))
+                                            flags), donate_argnums=(2,))
     exact_losses, exact_final, exact_dt = train(
         lambda p, o, s, b: estep(p, o, s, b),
-        init_dist_sync_state(scfg, mesh, params0))
+        lambda: init_dist_sync_state(scfg, mesh, params0))
     emit("async/exact_steps_per_s", exact_dt / STEPS * 1e6,
          f"{STEPS / exact_dt:.1f} steps/s (sync exact baseline)")
 
-    def async_run(tau_max, compressor, ef, seed=0):
+    def async_run(tau_max, compressor, ef, seed=0, overlap=True, reps=1):
         # track_gap off: the steps/s rows compare the engine's hot path
-        # (same all-reduce volume as sync) against the exact baseline
+        # at exactly its configured wire volume.  reps > 1 re-runs the
+        # timed loop on the SAME compiled step and keeps the best dt —
+        # the wall-clock gates compare ~100ms/step loops, where one
+        # scheduler hiccup in a single sample swamps a 20% margin.
         acfg = AsyncConfig(tau_max=tau_max, schedule="uniform",
                            compressor=compressor, error_feedback=ef,
                            topk_ratio=1 / 8, horizon=STEPS, seed=seed,
-                           track_gap=False)
+                           track_gap=False, overlap=overlap)
         astep = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
-                                              flags))
-        return train(astep, init_async_state(acfg, mesh, params0))
+                                              flags), donate_argnums=(2,))
+        mkstate = lambda: init_async_state(
+            acfg, mesh, params0, pspecs if acfg.fused else None)
+        losses, final, dt = train(astep, mkstate)
+        for _ in range(reps - 1):
+            dt = min(dt, train(astep, mkstate)[2])
+        return losses, final, dt
 
     # tau_max=0 parity: bounded-delay delivery with a capacity-1 ring IS
     # the synchronous step
@@ -121,13 +140,34 @@ def _child() -> None:
 
     # EF vs no-EF under growing staleness (top-k sparsification)
     for tau in TAUS:
-        # train() already excludes compile (warmup step), so time the rows
+        # train() already excludes compile (warmup steps), so time the rows
         # from its returned dts, not an outer wall clock around jit builds
         _, f_ef, dt_ef = async_run(tau, "topk", True)
         _, f_noef, dt_noef = async_run(tau, "topk", False)
         emit(f"accept/async_ef_tau{tau}", (dt_ef + dt_noef) * 1e6 / (2 * STEPS),
              f"final loss ef={f_ef:.4f} noef={f_noef:.4f} "
              f"ef-noef={f_ef - f_noef:+.4f} (tau_max={tau})")
+
+    # wall-clock speedup gate: the fused overlapped engine vs the SAME
+    # configuration with overlap=False — the synchronous-wire program (the
+    # compressed payload densifies into the ring and pays the full dense
+    # pmean, exactly the sync all-reduce volume).  The two walk the same
+    # trajectory step for step (tests/test_dist_parity.py), so final loss
+    # is matched by construction and the comparison isolates what the
+    # fused compress-then-reduce buys in wall-clock.  Sync exact steps/s
+    # is printed alongside for scale.
+    for tau in (4, 16):
+        _, f_fused, dt_fused = async_run(tau, "topk", True, seed=2, reps=5)
+        _, f_dens, dt_dens = async_run(tau, "topk", True, seed=2,
+                                       overlap=False, reps=5)
+        sps_f, sps_d = STEPS / dt_fused, STEPS / dt_dens
+        matched = abs(f_fused - f_dens) <= 1e-4
+        status = "OK" if (sps_f > sps_d and matched) else "FAIL"
+        emit(f"accept/async_speedup_tau{tau}", dt_fused / STEPS * 1e6,
+             f"fused {sps_f:.1f} vs sync-wire {sps_d:.1f} steps/s "
+             f"(x{sps_f / sps_d:.2f}; sync exact {STEPS / exact_dt:.1f}) "
+             f"final loss fused={f_fused:.4f} dens={f_dens:.4f} "
+             f"matched={matched}: {status}")
 
 
 def run() -> list:

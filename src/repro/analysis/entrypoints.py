@@ -108,7 +108,7 @@ def _build_elastic(strategy: str, data_parallel: int, *,
 
 
 def _build_async(tau_max: int, compressor: str, data_parallel: int,
-                 seed: int = 0):
+                 seed: int = 0, overlap: bool = True):
     from repro.dist.async_engine import (AsyncConfig, init_async_state,
                                          make_async_train_step)
     cfg, mesh, flags, pspecs, ab_params, opt, ab_opt, batch = \
@@ -117,9 +117,10 @@ def _build_async(tau_max: int, compressor: str, data_parallel: int,
                        compressor=compressor,
                        error_feedback=compressor != "none",
                        topk_ratio=1 / 8, horizon=64, seed=seed,
-                       track_gap=False)
+                       track_gap=False, overlap=overlap)
     ab_state = jax.eval_shape(
-        lambda: init_async_state(acfg, mesh, ab_params))
+        lambda: init_async_state(acfg, mesh, ab_params,
+                                 pspecs if acfg.fused else None))
     step = make_async_train_step(cfg, opt, mesh, acfg, pspecs, flags)
     return step, (ab_params, ab_opt, ab_state, batch)
 
@@ -281,9 +282,28 @@ def make_registry(data_parallel: int = 1) -> list:
             lambda: _build_async(4, "topk", p),
             donate=(0, 1, 2), strategy="async_tau4_topk_ef",
             compile_entry=True,
-            notes="compressed deposits are densified into the full-width "
-                  "ring and pmean'd dense — a known ROADMAP gap the "
-                  "golden inventory documents (not a wire win)"),
+            variant=lambda: _build_async(4, "topk", p, seed=7),
+            notes="fused overlap path: the wire is one compact "
+                  "(vals, idx) all-gather per step; delivery is the "
+                  "cr_reduce masked decompress-reduce from the payload "
+                  "ring — no dense pmean anywhere in the program"),
+        EntryPoint(
+            "async/tau4_topk_ef_densified", "async",
+            lambda: _build_async(4, "topk", p, overlap=False),
+            donate=(0, 1, 2), strategy="async_tau4_topk_ef_densified",
+            compile_entry=True,
+            notes="overlap=False escape hatch (tensor-parallel meshes): "
+                  "compressed deposits densify into the full-width ring "
+                  "and pmean dense — same trajectory as the fused path, "
+                  "sync-sized wire"),
+        EntryPoint(
+            "async/tau4_onebit_ef", "async",
+            lambda: _build_async(4, "onebit", p),
+            donate=(0, 1, 2), strategy="async_tau4_onebit_ef",
+            compile_entry=True,
+            variant=lambda: _build_async(4, "onebit", p, seed=7),
+            notes="fused overlap path, sign/mean wire form (bool bitmap "
+                  "+ 2 means per row)"),
         EntryPoint(
             "serve/prefill_dense", "serve", _build_prefill_dense,
             compile_entry=True),

@@ -104,6 +104,33 @@ def tree_ring_take(rings, slot):
     return taken, rings
 
 
+def delivery_plan(taus: jax.Array, step, cap: int):
+    """Per-worker delivery plan for step ``step``'s fresh messages.
+
+    The fused async engine (`repro.dist.async_engine`, ``overlap`` path)
+    all-gathers each step's compact compressed payloads and decompresses
+    every live message exactly ONCE, straight into the dense
+    delivery-indexed accumulator ring at slot ``(step + tau) % cap`` (the
+    `kernels.cr_reduce` deposit ops — one fused scatter-reduce of the
+    whole panel).  Slot ``t % cap`` is taken (and zeroed) at the start of
+    step ``t`` for the overlappable prior deliveries, and taken again
+    after the deposit for the ``tau == 0`` self-deliveries, which land in
+    the freshly-zeroed slot.  ``DROPPED`` (crashed) messages get weight 0
+    and are never applied — the same mass loss as the dense rings'
+    deposit masking.
+
+    Returns ``(w_live (n,), slots (n,))`` over ``taus`` (horizon, n): the
+    float32 0/1 aliveness weights of this step's n messages and the
+    accumulator slot each lands in (``step % cap`` where the weight is 0
+    — the write is zero there).
+    """
+    horizon, _ = taus.shape
+    tau = taus[jnp.mod(step, horizon)]               # (n,) this step's delays
+    w_live = (tau >= 0).astype(jnp.float32)
+    slots = jnp.mod(step + jnp.clip(tau, 0, cap - 1), cap)
+    return w_live, slots
+
+
 # ---------------------------------------------------------------------------
 # per-message delay masks (simulator async kind)
 # ---------------------------------------------------------------------------

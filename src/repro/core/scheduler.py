@@ -170,6 +170,69 @@ def ef_compress_leaf(g, err, spec, method: str, topk_ratio: float = 1 / 64):
     return payload, w - payload
 
 
+def leaf_rows_geometry(shape, spec):
+    """Static row-space geometry of a leaf: ``(m, r, perm, tshape)`` for
+    the (M, R) layout :func:`_to_rows` produces — M = product of
+    model-sharded dims (kept local), R = the rest (compressed).  Lets the
+    bounded-staleness engine size compact payload buffers without tracing
+    a compression."""
+    model, other = _split_model_dims(spec, len(shape))
+    perm = model + other
+    tshape = tuple(shape[i] for i in perm)
+    m = 1
+    for i in model:
+        m *= shape[i]
+    size = 1
+    for s in shape:
+        size *= s
+    r = size // m if m else 0
+    return m, r, perm, tshape
+
+
+def ef_compress_leaf_compact(g, err, spec, method: str,
+                             topk_ratio: float = 1 / 64, impl: str = "auto"):
+    """One local compression round of a leaf, kept in *wire form*: the
+    fused-reduction twin of :func:`ef_compress_leaf`.
+
+    Returns ``(payload, new_err)`` where ``payload`` is a dict of compact
+    row-space arrays — ``{"vals" (M, k), "idx" (M, k)}`` for top-k,
+    ``{"pos" (M, R) bool, "means" (M, 2)}`` for one-bit — and ``new_err``
+    the error-feedback residual in the leaf's own shape.  Q(err + g) is
+    never densified: the consumer (`repro.dist.async_engine`) all-gathers
+    the compact payload and reduces it with the `kernels.cr_reduce`
+    compress-then-reduce family.  The densified reconstruction
+    (scatter / sign-select of the payload) is bit-identical to
+    :func:`ef_compress_leaf`'s payload, which is what makes the fused and
+    densified engines trajectory-equal.
+
+    Zero-size leaves return zero-size payload arrays (``k`` collapses to
+    0) so the payload tree keeps a uniform structure.
+    """
+    from repro.kernels.cr_reduce import ops as CR
+    w = err + g.astype(jnp.float32)
+    m, r, perm, tshape = leaf_rows_geometry(g.shape, spec)
+    if w.size == 0:  # zero-layer dry-run variants
+        if method == "topk":
+            payload = {"vals": jnp.zeros((m, 0), jnp.float32),
+                       "idx": jnp.zeros((m, 0), jnp.int32)}
+        else:
+            payload = {"pos": jnp.zeros((m, r), bool),
+                       "means": jnp.zeros((m, 2), jnp.float32)}
+        return payload, w
+    rows, perm, tshape = _to_rows(w, spec)
+    if method == "topk":
+        vals, idx, err_rows = CR.topk_compress_rows(
+            rows, jnp.zeros_like(rows), topk_ratio, impl=impl)
+        payload = {"vals": vals, "idx": idx}
+    elif method == "onebit":
+        pos, means, err_rows = CR.onebit_compress_rows(
+            rows, jnp.zeros_like(rows))
+        payload = {"pos": pos, "means": means}
+    else:
+        raise ValueError(f"unknown compressor {method!r}")
+    return payload, _from_rows(err_rows, perm, tshape)
+
+
 def _leaf_topk_sync(g, err, spec, ratio, axes):
     """Top-k + EF sync of one leaf. Returns (synced_mean, new_err)."""
     w = err + g.astype(jnp.float32)

@@ -1,0 +1,12 @@
+from repro.kernels.cr_reduce.kernel import (topk_cr_reduce,  # noqa: F401
+                                            topk_cr_deposit,
+                                            onebit_cr_reduce,
+                                            onebit_cr_deposit)
+from repro.kernels.cr_reduce.ref import (topk_cr_reduce_ref,  # noqa: F401
+                                         topk_cr_deposit_ref,
+                                         onebit_cr_reduce_ref,
+                                         onebit_cr_deposit_ref)
+from repro.kernels.cr_reduce.ops import (topk_reduce,  # noqa: F401
+                                         topk_deposit,
+                                         onebit_reduce,
+                                         onebit_deposit)

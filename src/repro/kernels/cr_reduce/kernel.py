@@ -1,0 +1,197 @@
+"""Fused compress-then-reduce Pallas TPU kernels.
+
+The other half of the `topk_ef` / `onebit_ef` compression kernels: those
+produce the compact wire payloads, these consume a *panel* of S such
+payloads (the all-gathered messages resident in the bounded-staleness
+engine's delivery rings) and reduce them straight to the dense weighted
+sum.  The panel is never densified to (S, M, R) in HBM — each grid step
+holds one (BM, R) accumulator in VMEM and streams the S messages' compact
+payloads through it, so the reduction's HBM traffic is the compressed
+bytes plus one dense output write.
+
+``weights (S, 1)`` folds the caller's per-message factors into the same
+pass: the engine's 0/1 delivery mask (which message is due this step),
+the 1/n of the mean, crash-substitution rescales.  A zero weight makes a
+message a no-op, so masking costs no branch.
+
+Tiling: (BM, R) row blocks as in `kernels/topk_ef`; the top-k scatter is
+k iterations of a row-indexed add on the VPU per message, the one-bit
+accumulate is a select + axpy per message.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _topk_cr_kernel(vals_ref, idx_ref, w_ref, out_ref, *, s: int, k: int):
+    bm, r = out_ref.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)[:, 0]
+
+    def per_message(si, acc):
+        w = w_ref[si, 0]
+
+        def per_entry(j, acc):
+            col = idx_ref[si, :, j]                       # (BM,)
+            v = vals_ref[si, :, j].astype(jnp.float32) * w
+            return acc.at[rows, col].add(v)
+
+        return jax.lax.fori_loop(0, k, per_entry, acc)
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, s, per_message, jnp.zeros((bm, r), jnp.float32))
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r", "block_rows", "interpret"))
+def topk_cr_reduce(vals: jax.Array, idx: jax.Array, weights: jax.Array, *,
+                   r: int, block_rows: int = 8, interpret: bool = False):
+    """vals (S, M, k), idx (S, M, k) i32, weights (S,) -> dense (M, R) f32
+    weighted scatter-sum of the S sparse messages."""
+    s, m, k = vals.shape
+    bm = min(block_rows, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_topk_cr_kernel, s=s, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, bm, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bm, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.float32),
+        interpret=interpret,
+    )(vals, idx, weights.reshape(s, 1).astype(jnp.float32))
+
+
+def _topk_cr_deposit_kernel(acc_ref, vals_ref, idx_ref, slots_ref, w_ref,
+                            out_ref, *, s: int, k: int):
+    cap, bm, r = out_ref.shape
+    rows = jax.lax.broadcasted_iota(jnp.int32, (bm, 1), 0)[:, 0]
+
+    def per_message(si, acc):
+        slot = slots_ref[si, 0]
+        w = w_ref[si, 0]
+
+        def per_entry(j, acc):
+            col = idx_ref[si, :, j]                       # (BM,)
+            v = vals_ref[si, :, j].astype(jnp.float32) * w
+            return acc.at[slot, rows, col].add(v)
+
+        return jax.lax.fori_loop(0, k, per_entry, acc)
+
+    out_ref[...] = jax.lax.fori_loop(0, s, per_message, acc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def topk_cr_deposit(acc: jax.Array, vals: jax.Array, idx: jax.Array,
+                    slots: jax.Array, weights: jax.Array, *,
+                    block_rows: int = 8, interpret: bool = False):
+    """Fused decompress-deposit: scatter S sparse messages (vals/idx
+    (S, M, k), weights (S,)) into their delay-ring slots (slots (S,)) of
+    acc (cap, M, R) f32 — the ring block stays resident in VMEM while the
+    S compact messages stream through it."""
+    s, m, k = vals.shape
+    cap, _, r = acc.shape
+    bm = min(block_rows, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_topk_cr_deposit_kernel, s=s, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cap, bm, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bm, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bm, k), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cap, bm, r), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cap, m, r), jnp.float32),
+        interpret=interpret,
+    )(acc, vals, idx, slots.reshape(s, 1).astype(jnp.int32),
+      weights.reshape(s, 1).astype(jnp.float32))
+
+
+def _onebit_cr_deposit_kernel(acc_ref, pos_ref, means_ref, slots_ref,
+                              w_ref, out_ref, *, s: int):
+    def per_message(si, acc):
+        slot = slots_ref[si, 0]
+        mean_pos = means_ref[si, :, 0][:, None]
+        mean_neg = means_ref[si, :, 1][:, None]
+        q = jnp.where(pos_ref[si], mean_pos, mean_neg) * w_ref[si, 0]
+        return acc.at[slot].add(q)
+
+    out_ref[...] = jax.lax.fori_loop(0, s, per_message, acc_ref[...])
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def onebit_cr_deposit(acc: jax.Array, pos: jax.Array, means: jax.Array,
+                      slots: jax.Array, weights: jax.Array, *,
+                      block_rows: int = 8, interpret: bool = False):
+    """Fused decompress-deposit of S sign/mean messages (pos (S, M, R),
+    means (S, M, 2), weights (S,)) into their slots of acc (cap, M, R)."""
+    s, m, r = pos.shape
+    cap = acc.shape[0]
+    bm = min(block_rows, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_onebit_cr_deposit_kernel, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((cap, bm, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bm, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bm, 2), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((cap, bm, r), lambda i: (0, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((cap, m, r), jnp.float32),
+        interpret=interpret,
+    )(acc, pos, means.astype(jnp.float32),
+      slots.reshape(s, 1).astype(jnp.int32),
+      weights.reshape(s, 1).astype(jnp.float32))
+
+
+def _onebit_cr_kernel(pos_ref, means_ref, w_ref, out_ref, *, s: int):
+    bm, r = out_ref.shape
+
+    def per_message(si, acc):
+        pos = pos_ref[si]                                 # (BM, R) bool
+        mean_pos = means_ref[si, :, 0][:, None]
+        mean_neg = means_ref[si, :, 1][:, None]
+        q = jnp.where(pos, mean_pos, mean_neg)
+        return acc + q * w_ref[si, 0]
+
+    out_ref[...] = jax.lax.fori_loop(
+        0, s, per_message, jnp.zeros((bm, r), jnp.float32))
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "interpret"))
+def onebit_cr_reduce(pos: jax.Array, means: jax.Array, weights: jax.Array,
+                     *, block_rows: int = 8, interpret: bool = False):
+    """pos (S, M, R) bool, means (S, M, 2) f32, weights (S,) -> dense
+    (M, R) f32 weighted sum of the S sign/mean messages."""
+    s, m, r = pos.shape
+    bm = min(block_rows, m)
+    assert m % bm == 0, (m, bm)
+    grid = (m // bm,)
+    return pl.pallas_call(
+        functools.partial(_onebit_cr_kernel, s=s),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((s, bm, r), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, bm, 2), lambda i: (0, i, 0)),
+            pl.BlockSpec((s, 1), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((bm, r), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, r), jnp.float32),
+        interpret=interpret,
+    )(pos, means.astype(jnp.float32),
+      weights.reshape(s, 1).astype(jnp.float32))

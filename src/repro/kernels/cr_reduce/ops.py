@@ -1,0 +1,126 @@
+"""Dispatch for the fused compress-then-reduce ops.
+
+``impl`` dispatch mirrors `kernels.sim_step.ops`: ``"kernel"`` is the
+Pallas TPU kernel (`kernel.py`, interpret mode off-TPU — used by the
+parity suite), ``"ref"`` the jnp oracle (`ref.py`), ``"auto"`` picks the
+kernel on TPU and the oracle elsewhere (same math; the oracle avoids pure
+interpreter overhead on CPU).
+
+Also hosts the row-space *compress* dispatch the bounded-staleness engine
+uses to build wire payloads without densifying (the compress half of
+compress-then-reduce): top-k routes through the `kernels.topk_ef` family,
+one-bit computes the sign/mean wire form (bool bitmap + two means per
+row) — the unpacked form the reduce kernels consume and
+`core.scheduler._leaf_onebit_sync` already ships; the 8x-packed
+`kernels.onebit_ef` variant stays a TPU-only wire optimization
+(ROADMAP: toolchain bump) because packing requires lane-aligned rows.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.cr_reduce.kernel import (onebit_cr_deposit,
+                                            onebit_cr_reduce,
+                                            topk_cr_deposit, topk_cr_reduce)
+from repro.kernels.cr_reduce.ref import (onebit_cr_deposit_ref,
+                                         onebit_cr_reduce_ref,
+                                         topk_cr_deposit_ref,
+                                         topk_cr_reduce_ref)
+
+
+def _resolve_impl(impl: str):
+    """-> (use_kernel, interpret)."""
+    on_tpu = jax.default_backend() == "tpu"
+    if impl == "auto":
+        return on_tpu, False
+    if impl == "kernel":
+        return True, not on_tpu
+    if impl == "ref":
+        return False, False
+    raise ValueError(impl)
+
+
+def topk_reduce(vals: jax.Array, idx: jax.Array, weights: jax.Array,
+                r: int, *, impl: str = "auto",
+                block_rows: int = 8) -> jax.Array:
+    """Weighted scatter-sum of S sparse messages: vals/idx (S, M, k),
+    weights (S,) -> dense (M, R) f32."""
+    use_kernel, interpret = _resolve_impl(impl)
+    s, m, k = vals.shape
+    if use_kernel and m > 0 and m % block_rows == 0 and s > 0 and k > 0 \
+            and r > 0:
+        return topk_cr_reduce(vals, idx, weights, r=r,
+                              block_rows=block_rows, interpret=interpret)
+    return topk_cr_reduce_ref(vals, idx, weights, r)
+
+
+def onebit_reduce(pos: jax.Array, means: jax.Array, weights: jax.Array,
+                  *, impl: str = "auto", block_rows: int = 8) -> jax.Array:
+    """Weighted sum of S sign/mean messages: pos (S, M, R), means (S, M, 2),
+    weights (S,) -> dense (M, R) f32."""
+    use_kernel, interpret = _resolve_impl(impl)
+    s, m, r = pos.shape
+    if use_kernel and m > 0 and m % block_rows == 0 and s > 0 and r > 0:
+        return onebit_cr_reduce(pos, means, weights,
+                                block_rows=block_rows, interpret=interpret)
+    return onebit_cr_reduce_ref(pos, means, weights, r)
+
+
+def topk_deposit(acc: jax.Array, vals: jax.Array, idx: jax.Array,
+                 slots: jax.Array, weights: jax.Array, *,
+                 impl: str = "auto", block_rows: int = 8) -> jax.Array:
+    """Fused decompress-deposit of S sparse messages into their delay-ring
+    slots: acc (cap, M, R) f32, vals/idx (S, M, k), slots/weights (S,)
+    -> updated acc (one scatter for the whole panel; zero weights no-op)."""
+    use_kernel, interpret = _resolve_impl(impl)
+    s, m, k = vals.shape
+    if use_kernel and m > 0 and m % block_rows == 0 and s > 0 and k > 0 \
+            and acc.size > 0:
+        return topk_cr_deposit(acc, vals, idx, slots, weights,
+                               block_rows=block_rows, interpret=interpret)
+    return topk_cr_deposit_ref(acc, vals, idx, slots, weights)
+
+
+def onebit_deposit(acc: jax.Array, pos: jax.Array, means: jax.Array,
+                   slots: jax.Array, weights: jax.Array, *,
+                   impl: str = "auto", block_rows: int = 8) -> jax.Array:
+    """Fused decompress-deposit of S sign/mean messages into their slots:
+    acc (cap, M, R) f32, pos (S, M, R), means (S, M, 2), slots/weights (S,)
+    -> updated acc."""
+    use_kernel, interpret = _resolve_impl(impl)
+    s, m, r = pos.shape
+    if use_kernel and m > 0 and m % block_rows == 0 and s > 0 and r > 0 \
+            and acc.size > 0:
+        return onebit_cr_deposit(acc, pos, means, slots, weights,
+                                 block_rows=block_rows, interpret=interpret)
+    return onebit_cr_deposit_ref(acc, pos, means, slots, weights)
+
+
+# ---------------------------------------------------------------------------
+# row-space compress (the other half; wire forms the reduce ops consume)
+# ---------------------------------------------------------------------------
+
+def topk_compress_rows(rows: jax.Array, err_rows: jax.Array, ratio: float,
+                       *, impl: str = "auto"):
+    """(M, R) rows + EF residual -> (vals (M, k) f32, idx (M, k) i32,
+    new_err (M, R) f32), k = max(1, round(R * ratio)) — the compact wire
+    payload, never densified."""
+    from repro.kernels.topk_ef.ops import compress_leaf
+    use_kernel, interpret = _resolve_impl(impl)
+    return compress_leaf(rows, err_rows, ratio, use_kernel, interpret)
+
+
+def onebit_compress_rows(rows: jax.Array, err_rows: jax.Array):
+    """(M, R) rows + EF residual -> (pos (M, R) bool, means (M, 2) f32,
+    new_err (M, R) f32) — Eq. 30 per row, in the unpacked wire form."""
+    w = err_rows + rows.astype(jnp.float32)
+    m, r = w.shape
+    pos = w >= 0.0
+    n_pos = jnp.maximum(jnp.sum(pos, axis=1), 1)
+    n_neg = jnp.maximum(r - jnp.sum(pos, axis=1), 1)
+    mean_pos = jnp.sum(jnp.where(pos, w, 0.0), axis=1) / n_pos
+    mean_neg = jnp.sum(jnp.where(pos, 0.0, w), axis=1) / n_neg
+    means = jnp.stack([mean_pos, mean_neg], axis=1)
+    q = jnp.where(pos, mean_pos[:, None], mean_neg[:, None])
+    return pos, means, w - q

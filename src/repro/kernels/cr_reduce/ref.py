@@ -1,0 +1,79 @@
+"""Pure-jnp oracle for the fused compress-then-reduce kernels.
+
+Both oracles reduce a *panel* of S compressed messages straight to the
+dense weighted sum — no per-message dense intermediate is ever
+materialized at (S, M, R), which is exactly the contract the Pallas
+kernels implement blockwise in VMEM.  ``weights`` carries everything the
+caller wants folded into the reduction: the 0/1 delivery mask of the
+bounded-staleness engine, the 1/n of a mean, crash-substitution rescales.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_cr_reduce_ref(vals: jax.Array, idx: jax.Array, weights: jax.Array,
+                       r: int) -> jax.Array:
+    """Weighted scatter-sum of S sparse messages.
+
+    vals (S, M, k) float, idx (S, M, k) int32 (per-row positions in
+    [0, r)), weights (S,) float -> dense (M, R) float32.  Duplicate
+    positions — within one message or across messages — accumulate.
+    """
+    s, m, k = vals.shape
+    if s == 0 or m == 0 or r == 0 or k == 0:
+        return jnp.zeros((m, r), jnp.float32)
+    w = vals.astype(jnp.float32) * weights.astype(jnp.float32)[:, None, None]
+    return jnp.zeros((m, r), jnp.float32).at[
+        jnp.arange(m)[None, :, None], idx].add(w)
+
+
+def onebit_cr_reduce_ref(pos: jax.Array, means: jax.Array,
+                         weights: jax.Array, r: int) -> jax.Array:
+    """Weighted sum of S sign/mean messages (Eq. 30 wire form).
+
+    pos (S, M, R) bool, means (S, M, 2) float32 (mean_pos, mean_neg),
+    weights (S,) float -> dense (M, R) float32.
+    """
+    s, m, _ = pos.shape
+    if s == 0 or m == 0 or r == 0:
+        return jnp.zeros((m, r), jnp.float32)
+    q = jnp.where(pos, means[..., 0:1], means[..., 1:2])
+    return jnp.sum(q * weights.astype(jnp.float32)[:, None, None], axis=0,
+                   dtype=jnp.float32)
+
+
+def topk_cr_deposit_ref(acc: jax.Array, vals: jax.Array, idx: jax.Array,
+                        slots: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted scatter of S sparse messages into ring slots.
+
+    acc (cap, M, R) f32, vals/idx (S, M, k), slots (S,) int32 in
+    [0, cap), weights (S,) float -> updated acc.  Message ``i`` lands in
+    slot ``slots[i]``; messages sharing a slot accumulate (also with the
+    slot's prior content), and a zero weight writes zeros — the
+    delivery-ring deposit of the bounded-staleness engine, fused with the
+    decompression.
+    """
+    s, m, k = vals.shape
+    if s == 0 or m == 0 or k == 0 or acc.size == 0:
+        return acc
+    w = vals.astype(jnp.float32) * weights.astype(jnp.float32)[:, None, None]
+    return acc.at[slots[:, None, None], jnp.arange(m)[None, :, None],
+                  idx].add(w)
+
+
+def onebit_cr_deposit_ref(acc: jax.Array, pos: jax.Array, means: jax.Array,
+                          slots: jax.Array, weights: jax.Array) -> jax.Array:
+    """Weighted slot deposit of S sign/mean messages.
+
+    acc (cap, M, R) f32, pos (S, M, R) bool, means (S, M, 2) f32,
+    slots (S,) int32, weights (S,) float -> updated acc (duplicate slots
+    accumulate).
+    """
+    s, m, _ = pos.shape
+    if s == 0 or m == 0 or acc.size == 0:
+        return acc
+    q = jnp.where(pos, means[..., 0:1], means[..., 1:2])
+    return acc.at[slots].add(
+        q * weights.astype(jnp.float32)[:, None, None])

@@ -40,6 +40,13 @@ def _parse():
     ap.add_argument("--crash-subst", action="store_true",
                     help="async: renormalize dead-worker mass so survivors "
                          "keep the full step size (paper crash_subst)")
+    ap.add_argument("--overlap", action=argparse.BooleanOptionalAction,
+                    default=True,
+                    help="async + --compressor: the fused overlapped "
+                         "compress-then-reduce delivery (compact wire); "
+                         "--no-overlap keeps the densified sync-wire "
+                         "delivery (also the fallback when tensor "
+                         "parallelism is on)")
     # fault injection (repro.faults): a plan path or inline JSON; the
     # supervisor forwards --fault-attempt so kill events fire exactly once
     ap.add_argument("--fault-plan", default="")
@@ -122,13 +129,23 @@ def main():
         horizon = max(args.steps, 1) \
             if args.async_schedule in ("crash", "rejoin") \
             else max(args.steps, 1024)
+        overlap = args.overlap
+        if overlap and args.compressor != "none" and args.model_shards > 1:
+            # jax-0.4.x SPMD partitioner: no all_gather under partial-auto
+            # shard_map on tensor-parallel meshes (ROADMAP toolchain bump)
+            print("overlap: disabled (compact-wire all_gather needs "
+                  "--model-shards 1 on this toolchain); using the "
+                  "densified delivery", flush=True)
+            overlap = False
         acfg = AsyncConfig(
             tau_max=args.tau_max, schedule=args.async_schedule,
             axis_names=("data",), compressor=args.compressor,
             error_feedback=args.ef, topk_ratio=args.topk_ratio,
             horizon=horizon, seed=args.seed,
-            crash_subst=args.crash_subst, skip_nonfinite=guard)
-        sync_state = init_async_state(acfg, mesh, params)
+            crash_subst=args.crash_subst, skip_nonfinite=guard,
+            overlap=overlap)
+        sync_state = init_async_state(acfg, mesh, params,
+                                      pspecs if acfg.fused else None)
         if injector is not None and injector.plan.has_tau_events:
             # scheduled crash/rejoin/delay/drop faults rewrite the pre-drawn
             # tau table — the engine then runs them with no new code, and a
@@ -168,10 +185,11 @@ def main():
                     raise ValueError(
                         "checkpointed sync/async state does not match the "
                         "current --sync configuration (different strategy, "
-                        "--tau-max, --compressor, --ef, or a --steps change "
-                        "that resized the tau table?) — delay rings and tau "
-                        "schedules cannot be reinterpreted; resume with the "
-                        "original flags or use a fresh --ckpt-dir")
+                        "--tau-max, --compressor, --ef, --overlap, or a "
+                        "--steps change that resized the tau table?) — "
+                        "delay rings and tau schedules cannot be "
+                        "reinterpreted; resume with the original flags or "
+                        "use a fresh --ckpt-dir")
                 sync_state = ckpt_state
             else:  # legacy (params, opt_state) checkpoints
                 params, opt_state = restored

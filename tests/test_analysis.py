@@ -98,16 +98,26 @@ def test_track_gap_costs_a_full_width_pmean(strategy_inventories):
 
 
 @pytest.mark.slow
-def test_async_wire_equals_sync_documented_gap(strategy_inventories):
-    """Async payloads are densified into the ring and pmean'd full-width
-    (ROADMAP gap): tau=0 and tau=4 trace to the SAME wire volume, within
-    a whisker of dense sync.  If this starts failing because async got
-    cheaper, celebrate and update the golden."""
+def test_async_fused_wire_beats_sync(strategy_inventories):
+    """The fused compress-then-reduce path closed the ROADMAP gap: the
+    compressed async engine's wire is one compact all-gather per step
+    (cr_reduce consumes the payload ring), so tau=4 top-k traces to ~8x
+    fewer bytes than dense sync at ratio 1/8 — it no longer densifies
+    into a full-width pmean.  Dense async (no compressor) and the
+    overlap=False escape hatch still pay exactly the sync-sized wire:
+    delivery semantics are unchanged, only the compressed wire shrank."""
     a0 = strategy_inventories["async_tau0"]["wire_bytes"]
     a4 = strategy_inventories["async_tau4"]["wire_bytes"]
     sync = strategy_inventories["sync"]["wire_bytes"]
-    assert a0 == a4
+    assert a0 == a4                          # dense: tau never changes wire
     assert abs(a0 - sync) < 0.01 * sync
+    dens = strategy_inventories["async_tau4_topk_ef_densified"]["wire_bytes"]
+    assert abs(dens - sync) < 0.01 * sync    # escape hatch: dense wire
+    topk = strategy_inventories["async_tau4_topk_ef"]["wire_bytes"]
+    onebit = strategy_inventories["async_tau4_onebit_ef"]["wire_bytes"]
+    assert topk < sync / 4                   # is sync/8 at ratio 1/8
+    assert onebit < sync / 4                 # bool bitmap: 1 byte/elt
+    assert topk > 0 and onebit > 0
 
 
 def test_wire_comparison_flags_regression():

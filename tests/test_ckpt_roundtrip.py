@@ -87,7 +87,7 @@ def test_sync_state_roundtrip(tmp_path, setup, strategy):
 def test_async_state_roundtrip(tmp_path, setup):
     mesh, pspecs, params = setup
     acfg = AsyncConfig(tau_max=2, schedule="uniform", compressor="topk",
-                       error_feedback=True, horizon=16)
+                       error_feedback=True, horizon=16, overlap=False)
     state = _randomize(init_async_state(acfg, mesh, params))
     buf0 = jax.tree.leaves(state["buf"])[0]
     assert buf0.shape[:2] == (1, 3)        # (workers, tau_max + 1, ...)
@@ -98,6 +98,29 @@ def test_async_state_roundtrip(tmp_path, setup):
     assert tuple(spec0)[:2] == ("data", None)
     restored = _roundtrip(tmp_path, mesh, state, specs)
     # the tau table round-trips exactly (schedule reproducibility on resume)
+    np.testing.assert_array_equal(np.asarray(restored["taus"]),
+                                  np.asarray(state["taus"]))
+
+
+def test_async_fused_state_roundtrip(tmp_path, setup):
+    """The fused engine's delivery-indexed accumulator rings checkpoint
+    too — a mid-flight stale message (already deposited, not yet taken)
+    survives a restart.  The rings are REPLICATED (every worker has
+    decompressed every received message), unlike the per-worker dense
+    rings; the EF residuals stay worker-sharded."""
+    mesh, pspecs, params = setup
+    acfg = AsyncConfig(tau_max=2, schedule="uniform", compressor="topk",
+                       error_feedback=True, horizon=16)
+    assert acfg.fused
+    state = _randomize(init_async_state(acfg, mesh, params, pspecs))
+    acc0 = jax.tree.leaves(state["acc"])[0]
+    assert acc0.ndim == 3 and acc0.shape[0] == 3   # (tau_max + 1, M, R)
+    specs = SH.sync_state_specs(state, pspecs, mesh)
+    assert tuple(jax.tree.leaves(specs["acc"], is_leaf=lambda x: isinstance(
+        x, P))[0]) == ()                           # replicated
+    assert tuple(jax.tree.leaves(specs["err"], is_leaf=lambda x: isinstance(
+        x, P))[0])[0] == "data"                    # per-worker
+    restored = _roundtrip(tmp_path, mesh, state, specs)
     np.testing.assert_array_equal(np.asarray(restored["taus"]),
                                   np.asarray(state["taus"]))
 

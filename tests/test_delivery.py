@@ -123,6 +123,27 @@ def test_ring_tau0_is_synchronous():
         assert taken[t, :, t].sum() == 2
 
 
+def test_delivery_plan_routes_every_live_message_once():
+    """delivery_plan's (w_live, slots) reproduce the ring invariants: over
+    a run, every live message is deposited into exactly the slot the dense
+    rings would use ((t + tau) % cap), DROPPED ones get weight 0, and a
+    message's slot is consumed at step t + tau — before anything else
+    lands in it."""
+    taus = DLV.make_tau_schedule("crash", 4, 12, 3, seed=5)
+    cap = 4
+    for t in range(12):
+        w_live, slots = DLV.delivery_plan(jnp.asarray(taus), t, cap)
+        w_live, slots = np.asarray(w_live), np.asarray(slots)
+        for wk in range(4):
+            tau = taus[t, wk]
+            if tau == DLV.DROPPED:
+                assert w_live[wk] == 0.0
+            else:
+                assert w_live[wk] == 1.0
+                assert slots[wk] == (t + tau) % cap
+                assert 0 <= tau <= 3         # consumed within the bound
+
+
 def test_delay_masks_partition():
     rng = np.random.default_rng(0)
     delays = rng.integers(0, 5, size=(7, 3, 3))

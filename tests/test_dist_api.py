@@ -67,12 +67,16 @@ def test_train_symbols_and_signatures():
 def test_async_engine_symbols_and_signatures():
     assert params_of(AE.make_async_train_step) == [
         "cfg", "opt", "mesh", "acfg", "pspecs", "flags", "grad_accum"]
-    assert params_of(AE.init_async_state) == ["acfg", "mesh", "params_like"]
+    assert params_of(AE.init_async_state) == ["acfg", "mesh", "params_like",
+                                              "pspecs"]
     acfg = AE.AsyncConfig()
     # the config surface launch/train + bench_async_ef drive
     assert acfg.tau_max == 0 and acfg.schedule == "uniform"
     assert acfg.compressor == "none" and acfg.error_feedback is True
     assert acfg.capacity == 1 and acfg.has_err is False
+    # overlap defaults ON but only changes the program with a compressor
+    assert acfg.overlap is True and acfg.fused is False
+    assert acfg.kernel_impl == "auto"
     # fault-tolerance knobs default OFF (the fast path traces no guards)
     assert acfg.crash_subst is False and acfg.skip_nonfinite is False
     from repro.core.delivery import DROPPED, TAU_SCHEDULES

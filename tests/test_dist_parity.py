@@ -166,11 +166,11 @@ def test_async_ef_state_only_when_configured(setup):
     assert "err" not in no_comp
     no_ef = init_async_state(
         AsyncConfig(tau_max=1, compressor="topk", error_feedback=False),
-        mesh, params)
+        mesh, params, pspecs)
     assert "err" not in no_ef
     acfg = AsyncConfig(tau_max=1, compressor="topk", error_feedback=True,
                        topk_ratio=1 / 8)
-    state = init_async_state(acfg, mesh, params)
+    state = init_async_state(acfg, mesh, params, pspecs)
     assert "err" in state
     step = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
                                          flags))
@@ -180,3 +180,92 @@ def test_async_ef_state_only_when_configured(setup):
     err_norm = sum(float(jnp.sum(jnp.square(e)))
                    for e in jax.tree.leaves(state["err"]))
     assert err_norm > 0
+
+
+# ---------------------------------------------------------------------------
+# overlapped (fused compress-then-reduce) engine
+# ---------------------------------------------------------------------------
+
+def _run_async(setup, acfg):
+    cfg, mesh, flags, pspecs, params, opt, batches = setup
+    state = init_async_state(acfg, mesh, params,
+                             pspecs if acfg.fused else None)
+    step = jax.jit(make_async_train_step(cfg, opt, mesh, acfg, pspecs,
+                                         flags))
+    p, opt_state, traj = params, opt.init(params), []
+    for b in batches:
+        p, opt_state, state, m = step(p, opt_state, state, b)
+        traj.append((float(m["loss"]),
+                     [np.asarray(x) for x in jax.tree.leaves(p)]))
+    return state, traj
+
+
+def test_async_tau0_overlap_bitwise_equals_gspmd(setup):
+    """The double-buffered dense take (prior-consume before deposit, own
+    remainder after) is BITWISE the single-take program: tau_max=0 still
+    reduces to synchronous SGD exactly, not just within tolerance."""
+    cfg, mesh, flags, pspecs, params, opt, batches = setup
+    _, traj = _run_async(setup, AsyncConfig(tau_max=0, schedule="constant"))
+    ref_params, ref_losses = _baseline(setup)
+    np.testing.assert_array_equal([l for l, _ in traj], ref_losses)
+    for a, b in zip(traj[-1][1], jax.tree.leaves(ref_params)):
+        np.testing.assert_array_equal(a, np.asarray(b))
+
+
+def test_async_state_layout_fused_vs_densified(setup):
+    cfg, mesh, flags, pspecs, params, opt, batches = setup
+    fused = init_async_state(
+        AsyncConfig(tau_max=2, compressor="topk", topk_ratio=1 / 8),
+        mesh, params, pspecs)
+    assert "acc" in fused and "buf" not in fused
+    # delivery-indexed accumulator rings: (capacity, M, R) f32 per leaf,
+    # in the leaf's row-space geometry (M * R == leaf size)
+    flat_p = jax.tree.leaves(params)
+    flat_a = jax.tree.leaves(fused["acc"])
+    assert len(flat_a) == len(flat_p)
+    for p, a in zip(flat_p, flat_a):
+        assert a.ndim == 3 and a.shape[0] == 3      # tau_max + 1 slots
+        assert a.dtype == jnp.float32
+        assert a.shape[1] * a.shape[2] == p.size
+    legacy = init_async_state(
+        AsyncConfig(tau_max=2, compressor="topk", overlap=False),
+        mesh, params)
+    assert "buf" in legacy and "acc" not in legacy
+    with pytest.raises(ValueError):      # fused needs the payload geometry
+        init_async_state(AsyncConfig(tau_max=2, compressor="topk"),
+                         mesh, params)
+
+
+@pytest.mark.parametrize("compressor", ["topk", "onebit"])
+def test_async_overlap_matches_densified_engine(setup, compressor):
+    """Pipelining must not change delivery semantics: the fused
+    compress-then-reduce engine (compact wire + cr_reduce deposit into
+    the delivery-indexed accumulator rings) and the overlap=False
+    densified engine walk the SAME trajectory step-for-step at tau_max=3,
+    for both compressors."""
+    kw = dict(tau_max=3, schedule="uniform", seed=1, compressor=compressor,
+              topk_ratio=1 / 8, track_gap=True)
+    _, fused = _run_async(setup, AsyncConfig(overlap=True, **kw))
+    _, legacy = _run_async(setup, AsyncConfig(overlap=False, **kw))
+    for t, ((lf, pf), (ll, pl)) in enumerate(zip(fused, legacy)):
+        assert lf == ll, f"loss diverged at step {t}"
+        for a, b in zip(pf, pl):
+            np.testing.assert_allclose(a, b, atol=TOL, rtol=0,
+                                       err_msg=f"step {t}")
+
+
+def test_async_overlap_noop_without_compressor(setup):
+    """overlap=True with compressor='none' is the densified program (the
+    dense wire cannot split its collective without doubling bytes), so
+    the state layout and trajectory are identical to overlap=False."""
+    cfg, mesh, flags, pspecs, params, opt, batches = setup
+    on = AsyncConfig(tau_max=2, schedule="uniform", seed=3, overlap=True)
+    off = AsyncConfig(tau_max=2, schedule="uniform", seed=3, overlap=False)
+    assert not on.fused
+    assert "buf" in init_async_state(on, mesh, params)
+    _, a = _run_async(setup, on)
+    _, b = _run_async(setup, off)
+    for (la, pa), (lb, pb) in zip(a, b):
+        assert la == lb
+        for x, y in zip(pa, pb):
+            np.testing.assert_array_equal(x, y)
