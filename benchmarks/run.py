@@ -28,6 +28,7 @@ MODULES = [
     "benchmarks.bench_faults",
     "benchmarks.bench_analysis",
     "benchmarks.bench_roofline",
+    "benchmarks.bench_cluster",
 ]
 
 JSON_PATH = os.environ.get("BENCH_JSON", "BENCH_sim.json")

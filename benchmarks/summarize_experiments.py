@@ -9,24 +9,40 @@ import glob
 import json
 import os
 import re
+import warnings
 
 from benchmarks.bench_roofline import analyze_record, write_markdown
 
 DRYRUN_DIR = "experiments/dryrun"
 EXP = "EXPERIMENTS.md"
+ROOFLINE_MD = "experiments/roofline.md"
 
 
-def load(mesh: str, sync: str = "exact"):
+def _read_artifact(path: str) -> dict | None:
+    """Torn/corrupt artifacts are warned about and skipped, same posture
+    as `bench_roofline.load_all`."""
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (json.JSONDecodeError, OSError, UnicodeDecodeError) as e:
+        warnings.warn(f"skipping unreadable dryrun artifact {path}: {e}")
+        return None
+
+
+def load(mesh: str, sync: str = "exact",
+         dryrun_dir: str = DRYRUN_DIR) -> dict:
     recs = {}
-    for p in sorted(glob.glob(f"{DRYRUN_DIR}/*__{mesh}__{sync}.json")):
-        r = json.load(open(p))
-        recs[(r["arch"], r["shape"])] = r
+    for p in sorted(glob.glob(
+            os.path.join(dryrun_dir, f"*__{mesh}__{sync}.json"))):
+        r = _read_artifact(p)
+        if r is not None:
+            recs[(r["arch"], r["shape"])] = r
     return recs
 
 
-def dryrun_block() -> str:
-    single = load("single")
-    multi = load("multi")
+def dryrun_block(dryrun_dir: str = DRYRUN_DIR) -> str:
+    single = load("single", dryrun_dir=dryrun_dir)
+    multi = load("multi", dryrun_dir=dryrun_dir)
     lines = ["", "### Per-pair dry-run record (single-pod 16x16 | "
              "multi-pod 2x16x16)", "",
              "| arch | shape | single: status / mem GB / compile s | "
@@ -58,15 +74,18 @@ def dryrun_block() -> str:
     return "\n".join(lines)
 
 
-def roofline_block() -> str:
+def roofline_block(dryrun_dir: str = DRYRUN_DIR,
+                   roofline_md: str = ROOFLINE_MD) -> str:
     rows = []
-    for p in sorted(glob.glob(f"{DRYRUN_DIR}/*__single__exact.json")):
-        a = analyze_record(json.load(open(p)))
+    for p in sorted(glob.glob(
+            os.path.join(dryrun_dir, "*__single__exact.json"))):
+        rec = _read_artifact(p)
+        a = analyze_record(rec) if rec is not None else None
         if a:
             rows.append(a)
     if not rows:
         return "\n(no roofline rows yet)\n"
-    write_markdown(rows, "experiments/roofline.md")
+    write_markdown(rows, roofline_md)
     lines = ["", "### Roofline terms per (arch x shape), single-pod, "
              "paper-faithful baseline", "",
              "| arch | shape | t_comp ms | t_mem ms | t_coll ms | dominant | "
@@ -94,11 +113,22 @@ def replace_block(text: str, marker: str, content: str) -> str:
     return pat.sub(lambda m: m.group(1) + "\n" + content, text)
 
 
+def summarize(exp_path: str = EXP, dryrun_dir: str = DRYRUN_DIR,
+              roofline_md: str = ROOFLINE_MD) -> str:
+    """Regenerate both blocks in ``exp_path`` in place; returns the new
+    text (the testable core of `main`)."""
+    with open(exp_path) as f:
+        text = f.read()
+    text = replace_block(text, "DRYRUN_SUMMARY", dryrun_block(dryrun_dir))
+    text = replace_block(text, "ROOFLINE_SUMMARY",
+                         roofline_block(dryrun_dir, roofline_md))
+    with open(exp_path, "w") as f:
+        f.write(text)
+    return text
+
+
 def main():
-    text = open(EXP).read()
-    text = replace_block(text, "DRYRUN_SUMMARY", dryrun_block())
-    text = replace_block(text, "ROOFLINE_SUMMARY", roofline_block())
-    open(EXP, "w").write(text)
+    summarize()
     print("EXPERIMENTS.md updated; experiments/roofline.md written")
 
 

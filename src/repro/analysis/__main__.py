@@ -6,7 +6,9 @@ human summary, optionally writes the full findings JSON (``--json`` — the
 CI artifact), and exits nonzero iff there are NEW findings — fingerprints
 not in the baseline.  ``--update-baseline`` rewrites the baseline to
 accept exactly the current findings (review the diff like any code
-change).
+change); newly accepted findings must come with ``--justify '...'`` —
+the write is refused otherwise, and a checked-in baseline carrying an
+empty/TODO justification fails the run.
 
 ``--devices N`` forces N host devices (XLA_FLAGS, set before jax imports)
 so the audited collectives carry real p > 1 avals; the default single
@@ -34,6 +36,9 @@ def _parse():
                     help="accepted-findings file (missing == empty)")
     ap.add_argument("--update-baseline", action="store_true",
                     help="rewrite the baseline to accept current findings")
+    ap.add_argument("--justify", default="",
+                    help="justification text for findings newly accepted "
+                         "by --update-baseline (refused without one)")
     ap.add_argument("--json", default="",
                     help="write the full findings/inventory JSON here")
     ap.add_argument("--devices", type=int, default=0,
@@ -59,7 +64,8 @@ def main() -> int:
             + f" --xla_force_host_platform_device_count={args.devices}")
 
     # jax (and everything that imports it) only after XLA_FLAGS is set
-    from repro.analysis.findings import Report, load_baseline, write_baseline
+    from repro.analysis.findings import (Report, load_baseline,
+                                         unjustified_entries, write_baseline)
 
     report = Report()
     timings = {}
@@ -84,13 +90,19 @@ def main() -> int:
     report.info["timings_s"] = timings
 
     if args.update_baseline:
-        write_baseline(args.baseline, report.findings)
+        try:
+            write_baseline(args.baseline, report.findings,
+                           {"*": args.justify} if args.justify else None)
+        except ValueError as e:
+            print(f"fail: {e}")
+            return 1
         print(f"baseline updated: {args.baseline} "
               f"({len(report.findings)} accepted findings)")
         return 0
 
     baseline = load_baseline(args.baseline)
     new = report.new_findings(baseline)
+    todo = unjustified_entries(args.baseline)
     if args.json:
         os.makedirs(os.path.dirname(args.json) or ".", exist_ok=True)
         with open(args.json, "w") as fh:
@@ -108,9 +120,17 @@ def main() -> int:
           f"{len(new)} NEW")
     for f in new:
         print(f"  NEW {f}")
+    for e in todo:
+        print(f"  UNJUSTIFIED {e['rule']} {e['where']} "
+              f"(fp {e['fingerprint']})")
     if new:
         print(f"fail: {len(new)} finding(s) not in {args.baseline} — fix "
-              f"them or justify via --update-baseline")
+              f"them or justify via --update-baseline --justify '...'")
+        return 1
+    if todo:
+        print(f"fail: {len(todo)} baselined finding(s) without a real "
+              f"justification in {args.baseline} — an accepted hazard "
+              f"needs a written reason")
         return 1
     return 0
 

@@ -225,6 +225,19 @@ def _build_prefill_paged():
     return step, args
 
 
+_CLUSTER_T, _CLUSTER_P, _CLUSTER_TAU = 16, 4, 3
+
+
+def _build_cluster(preset_name: str = "uniform"):
+    from repro.cluster import preset
+    from repro.cluster.perf import _build_event_scan, durations_table
+    spec = preset(preset_name, p=_CLUSTER_P, steps=_CLUSTER_T)
+    d, alive = durations_table(spec, _CLUSTER_T, 4e8, 4.7e6)
+    fn = _build_event_scan(_CLUSTER_TAU)
+    return fn, (jnp.asarray(d), jnp.asarray(alive),
+                jnp.float32(spec.apply_s))
+
+
 def make_registry(data_parallel: int = 1) -> list:
     """Every public jitted entry point at audit scale.
 
@@ -304,6 +317,14 @@ def make_registry(data_parallel: int = 1) -> list:
             variant=lambda: _build_async(4, "onebit", p, seed=7),
             notes="fused overlap path, sign/mean wire form (bool bitmap "
                   "+ 2 means per row)"),
+        EntryPoint(
+            "cluster/event_scan", "cluster",
+            lambda: _build_cluster("uniform"),
+            variant=lambda: _build_cluster("straggler_heavy"),
+            notes="discrete-event cluster loop (repro.cluster.perf): the "
+                  "trace tables are data, not program — a different "
+                  "cluster shape must not retrace; collective-free by "
+                  "construction (host-side co-simulation)"),
         EntryPoint(
             "serve/prefill_dense", "serve", _build_prefill_dense,
             compile_entry=True),

@@ -87,28 +87,67 @@ def load_baseline(path: str) -> set:
     return {e["fingerprint"] for e in data.get("accepted", [])}
 
 
-def write_baseline(path: str, findings) -> None:
+def _is_real_justification(text) -> bool:
+    t = str(text or "").strip()
+    return bool(t) and not t.upper().startswith("TODO")
+
+
+def unjustified_entries(path: str) -> list:
+    """Baselined entries whose justification is empty or a TODO
+    placeholder.  CI fails on any: an accepted hazard nobody justified is
+    a suppression, not a baseline."""
+    if not path or not os.path.exists(path):
+        return []
+    with open(path) as fh:
+        data = json.load(fh)
+    return [e for e in data.get("accepted", [])
+            if not _is_real_justification(e.get("justification"))]
+
+
+def write_baseline(path: str, findings, justifications=None) -> None:
     """(Re)write the baseline to accept exactly ``findings`` — the
     ``--update-baseline`` flow.  Context rides along for the reviewer;
     ``justification`` strings hand-written into the checked-in file are
-    preserved across rewrites (entries are keyed by fingerprint)."""
+    preserved across rewrites (entries are keyed by fingerprint).
+
+    Every entry must carry a real justification: for findings not already
+    justified in the checked-in file, supply ``justifications`` —
+    fingerprint -> text, with ``"*"`` as a catch-all — or the write is
+    refused (no more ``TODO: justify or fix`` placeholders landing in CI).
+    """
+    justifications = dict(justifications or {})
     old = {}
     if os.path.exists(path):
         with open(path) as fh:
             old = {e["fingerprint"]: e
                    for e in json.load(fh).get("accepted", [])}
     entries = {}
+    missing = []
     for f in sorted(findings, key=lambda f: (f.pass_name, f.rule, f.where)):
         if f.fingerprint in entries:
+            continue
+        just = old.get(f.fingerprint, {}).get("justification", "")
+        if not _is_real_justification(just):
+            just = justifications.get(f.fingerprint,
+                                      justifications.get("*", ""))
+        if not _is_real_justification(just):
+            missing.append(f)
             continue
         entries[f.fingerprint] = {
             "fingerprint": f.fingerprint,
             "rule": f"{f.pass_name}/{f.rule}",
             "where": f.where,
             "detail": f.detail,
-            "justification": old.get(f.fingerprint, {}).get(
-                "justification", "TODO: justify or fix"),
+            "justification": str(just).strip(),
         }
+    if missing:
+        locs = ", ".join(f"{f.where} (fp {f.fingerprint})"
+                         for f in missing[:5])
+        raise ValueError(
+            f"refusing to baseline {len(missing)} finding(s) without a "
+            f"real justification: {locs}" + ("..." if len(missing) > 5
+                                             else "")
+            + " — pass --justify (or per-fingerprint justifications)")
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as fh:
         json.dump({"accepted": list(entries.values())}, fh, indent=1,

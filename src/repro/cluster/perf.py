@@ -1,0 +1,189 @@
+"""Discrete-event cluster performance model.
+
+Closes the loop the paper leaves open: Def. 1 bounds *what* staleness may
+do to the iterate, this module prices *where it comes from and what it
+costs*.  A `ClusterSpec` (rates, bandwidths, trace events) plus a
+per-strategy cost point (flops and bytes-on-wire per step) is advanced by
+a jitted `lax.scan` event loop under the bounded-staleness discipline:
+
+  begin(t, w) = max(finish(t-1, w), A(t-1-tau_max))          worker gate
+  finish(t,w) = begin(t, w) + d_w(t)                         message done
+  A(t)        = max(A(t-1) + apply_s, max_w finish(t-tau_max, w))
+
+The learner gate makes the staleness bound *structural*: step ``t`` cannot
+close until every alive worker's step ``t - tau_max`` message has landed,
+so the measured ``tau(t, worker)`` table the loop emits always satisfies
+``0 <= tau <= tau_max`` — the same invariant `core.delivery`'s rings pin —
+with `DROPPED` rows exactly where the trace preempts a worker.  ``A`` is
+the cumulative wall-clock curve co-simulation reads time-to-loss off.
+
+With ``tau_max = 0`` the recurrence degenerates to bulk-synchronous SGD
+(every step waits for the slowest worker), which is what makes straggler
+traces price sync vs async honestly.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import INPUT_SHAPES, get_config
+from repro.core.delivery import DROPPED, validate_tau_table
+
+from .spec import ClusterSpec
+
+
+def trace_tables(spec: ClusterSpec, t_len: int):
+    """Expand the spec's trace events into (rates, bandwidth, alive) tables
+    of shape ``(t_len, p)`` — host-side, pre-drawn (oblivious adversary,
+    same posture as `sim_types.make_schedule`)."""
+    rates = np.tile(spec.rates, (t_len, 1))
+    bw = np.tile(spec.bandwidth, (t_len, 1))
+    alive = np.ones((t_len, spec.p), bool)
+    for ev in spec.events:
+        w = ev.worker % spec.p
+        s = min(ev.step, t_len)
+        end = t_len if ev.duration == 0 else min(s + ev.duration, t_len)
+        if ev.kind == "straggle":
+            rates[s:end, w] /= ev.factor
+        elif ev.kind == "netdeg":
+            bw[s:end, w] /= ev.factor
+        elif ev.kind == "preempt":
+            alive[s:end, w] = False
+    return rates, bw, alive
+
+
+def durations_table(spec: ClusterSpec, t_len: int, flops: float,
+                    wire_bytes: float, hbm_bytes: float = 0.0):
+    """Per-(step, worker) message durations in seconds: the roofline max of
+    compute and HBM terms, plus the wire term.  Returns ``(d, alive)``."""
+    rates, bw, alive = trace_tables(spec, t_len)
+    t_work = np.maximum(flops / rates, hbm_bytes / spec.hbm[None, :])
+    d = t_work + wire_bytes / bw + spec.latency[None, :]
+    return d.astype(np.float32), alive
+
+
+def _build_event_scan(tau_max: int):
+    """Jitted event loop for a fixed staleness bound.  Registered in
+    `analysis.entrypoints` (group ``cluster``) so the jaxpr auditor checks
+    it stays collective-free and retrace-stable."""
+    cap = tau_max + 1
+
+    @jax.jit
+    def cluster_scan(d, alive, apply_s):
+        # d: (T, p) f32 durations; alive: (T, p) bool; apply_s: scalar
+        p = d.shape[1]
+
+        def tick(carry, xs):
+            fin_prev, ring, a_hist = carry
+            d_t, alive_t = xs
+            a_prev = a_hist[0]              # A(t-1)
+            a_old = a_hist[cap - 1]         # A(t-1-tau_max)
+            begin = jnp.maximum(fin_prev, a_old)
+            fin = jnp.where(alive_t, begin + d_t, a_prev)
+            # dead workers park a zero in the ring: it can never gate
+            # (A is nonnegative and nondecreasing), like a missing message
+            ring = jnp.concatenate(
+                [jnp.where(alive_t, fin, 0.0)[None], ring[:-1]], axis=0)
+            a_t = jnp.maximum(a_prev + apply_s, jnp.max(ring[cap - 1]))
+            a_hist = jnp.concatenate([a_t[None], a_hist[:-1]], axis=0)
+            return (fin, ring, a_hist), (fin, a_t)
+
+        carry0 = (jnp.zeros((p,), jnp.float32),
+                  jnp.zeros((cap, p), jnp.float32),
+                  jnp.zeros((cap,), jnp.float32))
+        _, (fins, closes) = jax.lax.scan(tick, carry0, (d, alive))
+        return fins, closes
+
+    return cluster_scan
+
+
+@dataclass(frozen=True)
+class ClusterRun:
+    """One event-loop rollout: measured staleness + wall-clock."""
+    spec: ClusterSpec
+    tau_max: int
+    taus: np.ndarray       # (T, p) int32, DROPPED where preempted
+    closes: np.ndarray     # (T,) cumulative learner wall-clock A(t)
+    finishes: np.ndarray   # (T, p) message finish times
+    durations: np.ndarray  # (T, p) message durations
+
+    @property
+    def total_s(self) -> float:
+        return float(self.closes[-1])
+
+    def time_at(self, step: int) -> float:
+        """Wall-clock seconds when learner step ``step`` closes."""
+        return float(self.closes[min(max(step, 0), len(self.closes) - 1)])
+
+    def tau_histogram(self) -> dict:
+        vals, counts = np.unique(self.taus, return_counts=True)
+        return {int(v): int(c) for v, c in zip(vals, counts)}
+
+
+def simulate_cluster(spec: ClusterSpec, t_len: int, tau_max: int,
+                     flops_per_step: float, wire_bytes: float,
+                     hbm_bytes: float = 0.0) -> ClusterRun:
+    """Advance the cluster ``t_len`` steps and extract the measured tau
+    table.  The rollout is extended by ``tau_max`` extra steps so every
+    message produced inside the horizon has its delivery window closed."""
+    t_ext = t_len + tau_max
+    d, alive = durations_table(spec, t_ext, flops_per_step, wire_bytes,
+                               hbm_bytes)
+    fins, closes = _build_event_scan(tau_max)(
+        jnp.asarray(d), jnp.asarray(alive), jnp.float32(spec.apply_s))
+    fins = np.asarray(fins, np.float64)
+    closes = np.asarray(closes, np.float64)
+    if tau_max == 0:
+        taus = np.zeros((t_len, spec.p), np.int32)
+    else:
+        # tau(s, w) = #{k in [0, tau_max) : A(s+k) < finish(s, w)}; the
+        # learner gate guarantees A(s+tau_max) >= finish(s, w), so the
+        # count never exceeds tau_max.
+        win = np.lib.stride_tricks.sliding_window_view(
+            closes, tau_max)[:t_len]                       # (T, tau_max)
+        taus = (win[:, :, None] < fins[:t_len, None, :]).sum(axis=1)
+    taus = np.where(alive[:t_len], taus, DROPPED).astype(np.int32)
+    validate_tau_table(taus, tau_max)
+    return ClusterRun(spec=spec, tau_max=tau_max, taus=taus,
+                      closes=closes[:t_len], finishes=fins[:t_len],
+                      durations=np.asarray(d[:t_len], np.float64))
+
+
+# -- analytic roofline terms (bench_roofline fallback) ---------------------
+
+def analytic_record(arch: str, shape_name: str, *, chips: int = 256) -> dict:
+    """First-order cost point for (arch, shape), shaped exactly like a
+    `launch.dryrun` artifact so `bench_roofline.analyze_record` consumes it
+    unchanged.  Used when no dryrun artifacts exist (e.g. CI): flops from
+    the parameter-count model, HBM bytes from weight+activation traffic,
+    collective bytes from a ring all-reduce of bf16 gradients."""
+    cfg = get_config(arch)
+    shape = INPUT_SHAPES[shape_name]
+    n = cfg.active_param_count()
+    tokens = shape.global_batch * (
+        1 if shape.kind == "decode" else shape.seq_len)
+    flops = (6.0 if shape.kind == "train" else 2.0) * n * tokens
+    # weights are streamed once per pass (fwd/bwd/opt for train) for
+    # batched passes, but re-read per token when decoding
+    passes = 3.0 if shape.kind == "train" else 1.0
+    weight_bytes = 2.0 * n * passes * (tokens if shape.kind == "decode"
+                                       else 1.0)
+    act_bytes = 12.0 * tokens * cfg.d_model * cfg.n_layers
+    kv_bytes = (4.0 * shape.global_batch * shape.seq_len * cfg.d_model
+                if shape.kind == "decode" else 0.0)
+    coll = 4.0 * n if shape.kind == "train" else 0.0
+    mem_gb = (2.0 * cfg.param_count() + kv_bytes) / chips / 2**30
+    return {
+        "arch": arch, "shape": shape_name, "status": "ok",
+        "mesh": "single", "source": "cluster-model",
+        "costs": {
+            "flops": flops / chips,
+            "bytes": (weight_bytes + act_bytes + kv_bytes) / chips,
+            "collectives": {"all-reduce": coll / chips,
+                            "total": coll / chips},
+        },
+        "memory": {"peak_per_device_gb": round(mem_gb, 4)},
+    }

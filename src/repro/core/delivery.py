@@ -202,6 +202,49 @@ def make_tau_schedule(schedule: str, p: int, T: int, tau_max: int,
     return taus.astype(np.int32)
 
 
+def validate_tau_table(taus: np.ndarray, tau_max: int) -> np.ndarray:
+    """Check a measured/loaded (T, p) delay table against the delivery
+    contract `make_tau_schedule` promises: int dtype, every entry in
+    ``[0, tau_max]`` or exactly :data:`DROPPED`.  Tables that pass are
+    safe for the delivery rings' exactly-once discipline (a delay beyond
+    ``tau_max`` would alias a ring slot still holding an unconsumed
+    message).  Returns the table as int32; raises ``ValueError`` on any
+    violation.  This is the ingestion gate for externally *measured*
+    staleness — e.g. `repro.cluster`'s event-loop traces."""
+    taus = np.asarray(taus)
+    if taus.ndim != 2:
+        raise ValueError(f"tau table must be (T, p), got shape {taus.shape}")
+    if not np.issubdtype(taus.dtype, np.integer):
+        raise ValueError(f"tau table must be integer, got {taus.dtype}")
+    if tau_max < 0:
+        raise ValueError(f"tau_max must be >= 0, got {tau_max}")
+    bad = (taus != DROPPED) & ((taus < 0) | (taus > tau_max))
+    if bad.any():
+        t, w = np.argwhere(bad)[0]
+        raise ValueError(
+            f"tau[{t}, {w}] = {taus[t, w]} outside [0, {tau_max}] "
+            f"and not DROPPED ({np.count_nonzero(bad)} bad entries)")
+    return taus.astype(np.int32)
+
+
+def taus_to_message_delays(taus: np.ndarray) -> np.ndarray:
+    """Broadcast a per-worker (T, p) delay table to the simulator's
+    per-message (T, p, p) ``delays[t, receiver, sender]`` layout
+    (`sim_types.make_schedule`'s async convention): every receiver sees
+    sender ``j``'s step-``t`` gradient after ``tau(t, j)`` steps, except a
+    worker's own gradient, which is always immediate (diagonal zero).
+    :data:`DROPPED` senders keep DROPPED off-diagonal — `delay_masks`
+    gives those messages no delivery level, i.e. they are never applied.
+    This is the bridge from a *measured* cluster trace to the convergence
+    simulator's staleness machinery."""
+    taus = np.asarray(taus, np.int32)
+    t_len, p = taus.shape
+    delays = np.broadcast_to(taus[:, None, :], (t_len, p, p)).copy()
+    idx = np.arange(p)
+    delays[:, idx, idx] = 0
+    return delays
+
+
 # ---------------------------------------------------------------------------
 # whole-run delivery tensors (fused simulator step)
 # ---------------------------------------------------------------------------

@@ -563,10 +563,18 @@ class GridResult:
 
 def simulate_grid(problems, relaxations, p_list, alphas, T: int,
                   seeds=(0,), x0=None, record_every: int = 10,
-                  fused="auto") -> GridResult:
+                  fused="auto", schedule_fn=None) -> GridResult:
     """Batched multi-(p, d) sweeps: one compiled program per
     (relaxation-statics, p) group instead of a Python loop of
     ``simulate_sweep`` calls.
+
+    ``schedule_fn(i_relax, p, seed) -> Schedule | None`` overrides the
+    pre-drawn scheduling randomness per case (None falls back to
+    :func:`make_schedule`).  This is the co-simulation hook: measured
+    ``tau(t, worker)`` traces from `repro.cluster`'s event loop enter the
+    grid here instead of the oblivious-adversary draw.  Schedules within
+    one (relaxation-statics, p) group stack on the vmap axis, so an
+    override must keep the same array shapes as the default draw.
 
     The cartesian product problems x relaxations x alphas x seeds is run
     for every p in ``p_list``.  Within a group, cases (schedule, alpha,
@@ -611,8 +619,11 @@ def simulate_grid(problems, relaxations, p_list, alphas, T: int,
                     f"the fused path for kind={relax0.kind!r}")
             cases = [(ir, ia, s) for ir in irs
                      for ia in range(len(alphas)) for s in seeds]
-            scheds = [make_schedule(relaxations[ir], p, d, T, s)
+            scheds = [schedule_fn(ir, p, s) if schedule_fn else None
                       for ir, _, s in cases]
+            scheds = [sc if sc is not None
+                      else make_schedule(relaxations[ir], p, d, T, s)
+                      for sc, (ir, _, s) in zip(scheds, cases)]
             per_step, per_run = _stack_schedules(scheds)
             alph = jnp.asarray([alphas[ia] for _, ia, _ in cases],
                                jnp.float32)

@@ -44,6 +44,47 @@ def test_report_new_findings_respects_baseline():
     assert rep.new_findings(set()) == [f1, f2]
 
 
+def test_write_baseline_refuses_unjustified(tmp_path):
+    """--update-baseline without a real justification is refused; a TODO
+    placeholder does not count as one."""
+    from repro.analysis.findings import unjustified_entries, write_baseline
+
+    path = str(tmp_path / "baseline.json")
+    f1 = Finding("lint", "r", "a", "x")
+    with pytest.raises(ValueError, match="without a real justification"):
+        write_baseline(path, [f1])
+    with pytest.raises(ValueError, match="without a real justification"):
+        write_baseline(path, [f1], {"*": "TODO: justify or fix"})
+    assert not os.path.exists(path)           # refused writes write nothing
+
+    write_baseline(path, [f1], {"*": "known wart, tracked in ROADMAP"})
+    assert load_baseline(path) == {f1.fingerprint}
+    assert unjustified_entries(path) == []
+
+
+def test_write_baseline_preserves_handwritten_justifications(tmp_path):
+    from repro.analysis.findings import unjustified_entries, write_baseline
+
+    path = str(tmp_path / "baseline.json")
+    f1 = Finding("lint", "r", "a", "x")
+    f2 = Finding("audit", "s", "b", "y")
+    write_baseline(path, [f1], {"*": "hand-reviewed: benign"})
+    # a rewrite adding f2 keeps f1's text and only needs to justify f2
+    write_baseline(path, [f1, f2], {f2.fingerprint: "new, also benign"})
+    entries = {e["fingerprint"]: e
+               for e in json.load(open(path))["accepted"]}
+    assert entries[f1.fingerprint]["justification"] == \
+        "hand-reviewed: benign"
+    assert entries[f2.fingerprint]["justification"] == "new, also benign"
+
+    # doctor a TODO into the checked-in file: CI's gate must flag it
+    entries[f1.fingerprint]["justification"] = "TODO: later"
+    with open(path, "w") as fh:
+        json.dump({"accepted": list(entries.values())}, fh)
+    bad = unjustified_entries(path)
+    assert [e["fingerprint"] for e in bad] == [f1.fingerprint]
+
+
 # ---------------------------------------------------------------------------
 # golden collective inventory (tentpole acceptance)
 # ---------------------------------------------------------------------------

@@ -1,0 +1,292 @@
+"""Tests for `repro.cluster` — the discrete-event cluster model and the
+time-to-loss co-simulation — plus the tau-table plumbing it adds to
+`core.delivery` and the roofline bench's analytic fallback.
+
+The load-bearing property: the tau tables the event loop *measures* must
+satisfy exactly the invariants `core.delivery`'s rings pin — every live
+message delivered exactly once within ``tau_max``, DROPPED rows never
+delivered.  That is checked by driving `test_delivery.check_ring_invariants`
+with measured tables, not synthetic ones.
+"""
+import json
+import os
+
+import numpy as np
+import pytest
+
+from repro.cluster import (ClusterSpec, TraceEvent, analytic_record, preset,
+                           rank_candidates, simulate_cluster, trace_tables,
+                           winners)
+from repro.cluster.cosim import Candidate
+from repro.core.delivery import (DROPPED, taus_to_message_delays,
+                                 validate_tau_table)
+
+from test_delivery import check_ring_invariants
+
+
+# ---------------------------------------------------------------------------
+# ClusterSpec: validation, serialization, generation
+# ---------------------------------------------------------------------------
+
+def test_spec_json_roundtrip():
+    spec = preset("straggler_heavy", p=4, steps=120)
+    again = ClusterSpec.from_json(spec.to_json())
+    assert again == spec
+    assert again.events == spec.events       # TraceEvents revive typed
+
+
+def test_spec_save_load_file(tmp_path):
+    spec = preset("preemptible", p=3, steps=60)
+    path = spec.save(str(tmp_path / "spec.json"))
+    assert ClusterSpec.load(path) == spec
+    # inline JSON is accepted too (FaultPlan idiom)
+    assert ClusterSpec.load(spec.to_json()) == spec
+
+
+def test_spec_random_deterministic():
+    a = ClusterSpec.random(seed=7, p=4, steps=100)
+    b = ClusterSpec.random(seed=7, p=4, steps=100)
+    assert a == b
+    assert ClusterSpec.random(seed=8, p=4, steps=100) != a
+    assert all(e.kind in ("straggle", "preempt", "netdeg")
+               for e in a.events)
+
+
+def test_spec_validation():
+    with pytest.raises(ValueError):
+        TraceEvent(step=0, kind="meteor", worker=0)
+    with pytest.raises(ValueError):
+        TraceEvent(step=-1, kind="straggle", worker=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(p=0)
+    with pytest.raises(ValueError):
+        ClusterSpec(p=4, flops_per_s=(1e9, 2e9))   # neither 1 nor p
+    with pytest.raises(ValueError):
+        preset("nope")
+
+
+def test_spec_rate_broadcast():
+    spec = ClusterSpec(p=3, flops_per_s=(1e9,),
+                       link_bytes_per_s=(1e8, 2e8, 3e8))
+    np.testing.assert_array_equal(spec.rates, [1e9] * 3)
+    np.testing.assert_array_equal(spec.bandwidth, [1e8, 2e8, 3e8])
+
+
+def test_trace_tables_apply_events():
+    spec = ClusterSpec(p=2, flops_per_s=(1e9,), link_bytes_per_s=(1e8,),
+                       events=(
+                           TraceEvent(step=2, kind="straggle", worker=0,
+                                      duration=3, factor=4.0),
+                           TraceEvent(step=1, kind="netdeg", worker=1,
+                                      duration=0, factor=2.0),
+                           TraceEvent(step=4, kind="preempt", worker=1,
+                                      duration=2),
+                       ))
+    rates, bw, alive = trace_tables(spec, 8)
+    np.testing.assert_allclose(rates[2:5, 0], 2.5e8)   # straggle window
+    np.testing.assert_allclose(rates[5:, 0], 1e9)      # ... then recovers
+    np.testing.assert_allclose(bw[1:, 1], 5e7)         # netdeg to run end
+    assert not alive[4:6, 1].any() and alive[6:, 1].all()
+
+
+# ---------------------------------------------------------------------------
+# event loop: staleness invariants on MEASURED tables
+# ---------------------------------------------------------------------------
+
+def test_event_loop_sync_is_bsp():
+    """tau_max=0 degenerates to bulk-synchronous: zero staleness and the
+    learner clock paced by the slowest worker."""
+    spec = preset("uniform", p=4, steps=40)
+    run = simulate_cluster(spec, 40, 0, 4e8, 4.7e6)
+    assert (run.taus == 0).all()
+    assert (np.diff(run.closes) > 0).all()
+
+
+def test_event_loop_free_running_saturates_tau():
+    """On a uniform cluster with tau_max=4, free-running workers sit at the
+    staleness bound in steady state (they are never the gate)."""
+    run = simulate_cluster(preset("uniform", p=4, steps=60), 60, 4,
+                           4e8, 4.7e6)
+    assert run.taus.max() == 4
+    assert (np.diff(run.closes) > 0).all()
+
+
+@pytest.mark.parametrize("shape", ["uniform", "straggler_heavy",
+                                   "preemptible"])
+@pytest.mark.parametrize("tau_max", [0, 2, 4])
+def test_measured_taus_within_bound(shape, tau_max):
+    run = simulate_cluster(preset(shape, p=4, steps=50), 50, tau_max,
+                           4e8, 5e5)
+    validate_tau_table(run.taus, tau_max)       # raises on violation
+    live = run.taus[run.taus != DROPPED]
+    assert live.min() >= 0 and live.max() <= tau_max
+
+
+def test_measured_taus_satisfy_ring_exactly_once():
+    """THE acceptance property: tables measured off the event loop drive
+    `core.delivery`'s rings with exactly-once delivery — including across
+    preemption windows (DROPPED rows lose exactly their own messages)."""
+    for shape, tau_max in (("straggler_heavy", 3), ("preemptible", 4),
+                           ("uniform", 2)):
+        run = simulate_cluster(preset(shape, p=4, steps=40), 40, tau_max,
+                               4e8, 5e5)
+        check_ring_invariants(run.taus, tau_max)
+
+
+def test_preemption_emits_dropped_rows():
+    run = simulate_cluster(preset("preemptible", p=4, steps=80), 80, 4,
+                           4e8, 4.7e6)
+    assert (run.taus == DROPPED).any()
+    dead = run.taus == DROPPED
+    # DROPPED only where the trace preempted, and histogram keys are legal
+    _, _, alive = trace_tables(run.spec, 80)
+    np.testing.assert_array_equal(dead, ~alive)
+    assert set(run.tau_histogram()) <= set(range(-1, 5))
+
+
+def test_straggler_cluster_prices_wire():
+    """The congested worker makes the dense sync wire slower than the
+    compressed one on straggler_heavy — the rate-ratio effect the co-sim
+    trades on (dense 4.7MB vs top-k 55kB per step)."""
+    spec = preset("straggler_heavy", p=4, steps=60)
+    dense = simulate_cluster(spec, 60, 0, 4e8, 4.7e6)
+    sparse = simulate_cluster(spec, 60, 0, 4e8, 5.5e4)
+    assert sparse.total_s < 0.5 * dense.total_s
+
+
+# ---------------------------------------------------------------------------
+# delivery plumbing: validate_tau_table / taus_to_message_delays
+# ---------------------------------------------------------------------------
+
+def test_validate_tau_table_rejects_bad_tables():
+    good = np.zeros((4, 2), np.int32)
+    assert validate_tau_table(good, 1).dtype == np.int32
+    with pytest.raises(ValueError):
+        validate_tau_table(np.full((4, 2), 3, np.int32), 2)   # > tau_max
+    with pytest.raises(ValueError):
+        validate_tau_table(np.full((4, 2), -2, np.int32), 2)  # < DROPPED
+    with pytest.raises(ValueError):
+        validate_tau_table(np.zeros((4, 2), np.float32), 2)   # not integer
+    with pytest.raises(ValueError):
+        validate_tau_table(np.zeros((4,), np.int32), 2)       # not (T, p)
+
+
+def test_taus_to_message_delays_broadcast():
+    taus = np.array([[0, 2], [DROPPED, 1]], np.int32)
+    delays = taus_to_message_delays(taus)
+    assert delays.shape == (2, 2, 2)
+    # layout is delays[t, receiver, sender]: sender w's delay reaches
+    # every *other* receiver; a worker's own gradient is immediate
+    assert delays[0, 0, 1] == 2 and delays[0, 1, 0] == 0
+    assert delays[0, 0, 0] == 0 and delays[0, 1, 1] == 0
+    assert delays[1, 1, 0] == DROPPED        # dropped stays dropped
+    assert delays[1, 0, 1] == 1
+
+
+# ---------------------------------------------------------------------------
+# co-simulation
+# ---------------------------------------------------------------------------
+
+CANDS = (Candidate("sync", "sync", "sync", 0),
+         Candidate("async_tau3", "async_tau4", "async", 3))
+
+
+def test_rank_candidates_sane_and_deterministic():
+    """Every candidate reaches the (loose) target, time-to-loss reads off
+    the candidate's own clock, and a re-run reproduces the ranking bit for
+    bit (seeded schedules, measured traces — no hidden randomness)."""
+    spec = preset("uniform", p=4, steps=120)
+    results, runs = rank_candidates(spec, CANDS, t_len=120,
+                                    target_frac=0.05)
+    assert {r.candidate for r in results} == {"sync", "async_tau3"}
+    for r in results:
+        assert np.isfinite(r.steps_to_loss) and np.isfinite(r.time_to_loss)
+        assert r.time_to_loss <= runs[r.candidate].total_s + 1e-9
+    win = winners(results)
+    assert win["steps"] in ("sync", "async_tau3")
+    again, _ = rank_candidates(spec, CANDS, t_len=120, target_frac=0.05)
+    assert again == results
+
+
+def test_rank_candidates_replays_measured_trace():
+    """The async convergence run consumes the cluster's measured tau table
+    (not a random draw): the emitted delays keep ring invariants."""
+    spec = preset("straggler_heavy", p=4, steps=100)
+    _, runs = rank_candidates(spec, CANDS, t_len=100, target_frac=0.05)
+    taus = runs["async_tau3"].taus
+    validate_tau_table(taus, 3)
+    check_ring_invariants(taus, 3)
+
+
+def test_cosim_cli_writes_ranking(monkeypatch, tmp_path, capsys):
+    from repro.launch import cosim as cli
+
+    spec_path = preset("straggler_heavy", p=4, steps=80).save(
+        str(tmp_path / "spec.json"))
+    out = tmp_path / "ranking.json"
+    monkeypatch.setattr("sys.argv", [
+        "cosim", "--cluster", spec_path, "--steps", "80",
+        "--target-frac", "0.05", "--out", str(out)])
+    assert cli.main() == 0
+    text = capsys.readouterr().out
+    assert "winner by  time-to-loss" in text
+    data = json.loads(out.read_text())
+    assert data["winners"]["time"] in {c["name"] for c in data["candidates"]}
+    assert data["cluster"] == json.loads(
+        ClusterSpec.load(spec_path).to_json())
+
+
+def test_cosim_cli_rejects_unknown_cluster():
+    from repro.launch import cosim as cli
+    with pytest.raises(SystemExit):
+        cli.load_cluster("not-a-preset-or-file", 4, 100)
+
+
+def test_winners_all_unreached():
+    results, _ = rank_candidates(preset("uniform", p=4, steps=8),
+                                 CANDS[:1], t_len=8, target_frac=1e-12)
+    assert winners(results) == {"steps": None, "time": None}
+
+
+# ---------------------------------------------------------------------------
+# roofline analytic fallback (the bench that never produced a row)
+# ---------------------------------------------------------------------------
+
+def test_analytic_record_shape():
+    rec = analytic_record("qwen3-1.7b-smoke", "train_4k")
+    assert rec["status"] == "ok"
+    assert rec["costs"]["flops"] > 0 and rec["costs"]["bytes"] > 0
+    assert rec["costs"]["collectives"]["total"] > 0      # train all-reduces
+    dec = analytic_record("qwen3-1.7b-smoke", "decode_32k")
+    assert dec["costs"]["collectives"]["total"] == 0     # decode does not
+
+
+def test_bench_roofline_emits_rows_without_artifacts(monkeypatch, tmp_path):
+    """With no dryrun artifacts and the smoke flag set (CI fast lane), the
+    bench emits REAL rows from the analytic model — the placeholder row is
+    gone."""
+    import benchmarks.bench_roofline as BR
+    monkeypatch.setattr(BR, "DRYRUN_DIR", str(tmp_path / "none"))
+    monkeypatch.setattr(BR, "SMOKE", True)
+    monkeypatch.chdir(tmp_path)                 # roofline.md lands here
+    rows = BR.run()
+    names = [r[0] for r in rows]
+    assert names and all(n.startswith("roofline/") for n in names)
+    assert not any("no_dryrun_artifacts" in n for n in names)
+    assert all("src=model" in r[2] for r in rows)
+    assert os.path.exists(tmp_path / "experiments" / "roofline.md")
+
+
+def test_bench_roofline_skips_torn_artifact(monkeypatch, tmp_path):
+    """A dry-run killed mid-write leaves a torn JSON: the loader warns and
+    skips it instead of sinking the whole bench."""
+    import benchmarks.bench_roofline as BR
+    d = tmp_path / "dryrun"
+    d.mkdir()
+    (d / "a__x__single__exact.json").write_text('{"arch": "torn", ')
+    good = analytic_record("qwen3-1.7b-smoke", "train_4k")
+    (d / "b__y__single__exact.json").write_text(json.dumps(good))
+    monkeypatch.setattr(BR, "DRYRUN_DIR", str(d))
+    with pytest.warns(UserWarning, match="unreadable dryrun artifact"):
+        rows = BR.load_all()
+    assert len(rows) == 1 and rows[0]["arch"] == "qwen3-1.7b-smoke"

@@ -1,0 +1,95 @@
+"""Tests for `benchmarks.summarize_experiments` — the EXPERIMENTS.md block
+regenerator.  Exercised against a doctored EXPERIMENTS.md and a scratch
+dryrun dir: zero-artifact behavior, real rows, torn-artifact tolerance,
+and `replace_block` idempotency (running the summarizer twice must be a
+no-op, not an accretion)."""
+import json
+
+import pytest
+
+import benchmarks.summarize_experiments as SE
+from repro.cluster import analytic_record
+
+DOC = """# Experiments
+
+intro prose
+
+<!-- DRYRUN_SUMMARY -->
+stale dryrun content to be replaced
+
+## Roofline
+
+<!-- ROOFLINE_SUMMARY -->
+stale roofline content
+
+## Perf
+
+perf notes stay untouched
+"""
+
+
+def _write_artifact(d, name, rec):
+    (d / name).write_text(json.dumps(rec))
+
+
+def _ok_record(arch="qwen3-1.7b-smoke", shape="train_4k"):
+    rec = analytic_record(arch, shape)
+    rec["compile_s"] = 1.2
+    return rec
+
+
+def test_blocks_with_zero_artifacts(tmp_path):
+    empty = str(tmp_path / "none")
+    assert "(no roofline rows yet)" in SE.roofline_block(empty)
+    block = SE.dryrun_block(empty)
+    assert "Totals: 0 ok, 0 skipped" in block
+
+
+def test_roofline_block_with_rows(tmp_path):
+    d = tmp_path / "dryrun"
+    d.mkdir()
+    _write_artifact(d, "a__train_4k__single__exact.json", _ok_record())
+    md = tmp_path / "roofline.md"
+    block = SE.roofline_block(str(d), str(md))
+    assert "qwen3-1.7b-smoke" in block and "train_4k" in block
+    assert "Dominant-term distribution" in block
+    assert md.exists()                       # sidecar markdown written
+
+
+def test_torn_artifact_skipped_with_warning(tmp_path):
+    d = tmp_path / "dryrun"
+    d.mkdir()
+    (d / "torn__x__single__exact.json").write_text('{"arch": ')
+    _write_artifact(d, "ok__train_4k__single__exact.json", _ok_record())
+    with pytest.warns(UserWarning, match="unreadable dryrun artifact"):
+        recs = SE.load("single", dryrun_dir=str(d))
+    assert len(recs) == 1
+
+
+def test_replace_block_idempotent(tmp_path):
+    """Regenerating twice yields byte-identical text, and untouched
+    sections survive."""
+    exp = tmp_path / "EXPERIMENTS.md"
+    exp.write_text(DOC)
+    d = tmp_path / "dryrun"
+    d.mkdir()
+    _write_artifact(d, "a__train_4k__single__exact.json", _ok_record())
+    md = str(tmp_path / "roofline.md")
+
+    once = SE.summarize(str(exp), str(d), md)
+    assert "stale dryrun content" not in once
+    assert "stale roofline content" not in once
+    assert "perf notes stay untouched" in once
+    assert "## Perf" in once and "## Roofline" in once
+
+    twice = SE.summarize(str(exp), str(d), md)
+    assert twice == once
+    assert exp.read_text() == once
+
+
+def test_replace_block_unit():
+    text = "head\n<!-- M -->\nold\n## Next\nrest"
+    out = SE.replace_block(text, "M", "NEW\n")
+    assert out == "head\n<!-- M -->\nNEW\n\n## Next\nrest"
+    # markers that are absent leave the text alone
+    assert SE.replace_block(text, "OTHER", "X") == text
